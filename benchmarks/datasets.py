@@ -1,0 +1,58 @@
+"""Benchmark dataset provisioning (paper Table 1 shapes, synthetic content).
+
+``suite(scale)`` returns the 8 paper-shaped datasets; benchmarks default to a
+CPU-friendly scale and expose ``--scale`` to grow toward the paper's N.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core.rb import suggest_sigma
+from repro.data.synthetic import PAPER_TABLE1, SuiteSpec, generate
+
+# Kernel bandwidth per dataset via the paper's protocol (§5 "Parameter
+# selection"): cross-validate σ within [0.01, 100] on a labeled subsample,
+# anchored at the median-ℓ₁ heuristic. All methods then share the selected
+# σ, exactly as the paper prescribes for fairness.
+_SIGMA_CACHE: Dict[tuple, float] = {}
+_CV_SCALES = (0.05, 0.15, 0.3, 0.5)
+
+
+def _sigma(spec, x, y) -> float:
+    key = (spec.name, x.shape[0], x.shape[1])
+    if key in _SIGMA_CACHE:
+        return _SIGMA_CACHE[key]
+    import jax.numpy as jnp
+    from repro.core import SCRBConfig, metrics, sc_rb
+    base = suggest_sigma(x, scale=1.0)
+    n_cv = min(x.shape[0], 1_200)
+    best, best_acc = base * 0.5, -1.0
+    for sc in _CV_SCALES:
+        sigma = max(base * sc, 1e-3)
+        try:
+            res = sc_rb(jnp.asarray(x[:n_cv]), SCRBConfig(
+                n_clusters=spec.k, n_grids=64, sigma=sigma,
+                kmeans_replicates=2, solver_iters=150))
+            acc = metrics.accuracy(res.labels, y[:n_cv])
+        except Exception:
+            continue
+        if acc > best_acc:
+            best, best_acc = sigma, acc
+    _SIGMA_CACHE[key] = best
+    return best
+
+
+def suite(scale: float = 0.02, seed: int = 0):
+    for spec in PAPER_TABLE1:
+        x, y = generate(spec, scale=scale, seed=seed)
+        yield spec, x, y, _sigma(spec, x, y)
+
+
+def one(name: str, scale: float = 0.02, seed: int = 0):
+    for spec in PAPER_TABLE1:
+        if spec.name == name:
+            x, y = generate(spec, scale=scale, seed=seed)
+            return spec, x, y, _sigma(spec, x, y)
+    raise KeyError(name)

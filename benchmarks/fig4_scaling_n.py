@@ -1,0 +1,65 @@
+"""Paper Fig. 4: linear scalability of SC_RB in the number of samples N.
+
+Per-stage runtime (RB generation / degrees / eigensolver / k-means) on the
+poker-shaped dataset across a geometric N sweep + a least-squares slope in
+log-log space (slope ≈ 1 ⇒ linear; the paper contrasts against quadratic SC).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.datasets import one
+from repro.core import SCRBConfig, sc_rb
+
+
+def run(ns=(1_000, 2_000, 4_000, 8_000, 16_000), rank: int = 256, seed: int = 0):
+    out = {"ns": list(ns), "stages": {}, "total_s": []}
+    stages = ["rb_features", "degrees", "svd", "kmeans"]
+    for st in stages:
+        out["stages"][st] = []
+    # jit warm-up at the smallest N so the sweep measures compute, not traces
+    spec0, x0, _, sig0 = one("poker", scale=ns[0] / 1_025_010, seed=seed)
+    sc_rb(jnp.asarray(x0[: ns[0]]), SCRBConfig(
+        n_clusters=spec0.k, n_grids=rank, sigma=sig0, kmeans_replicates=4,
+        seed=seed))
+    for n in ns:
+        spec, x, y, sigma = one("poker", scale=n / 1_025_010, seed=seed)
+        x = x[:n]
+        cfg = SCRBConfig(n_clusters=spec.k, n_grids=rank, sigma=sigma,
+                         kmeans_replicates=4, seed=seed)
+        res = sc_rb(jnp.asarray(x), cfg)
+        for st in stages:
+            out["stages"][st].append(res.timer.times.get(st, 0.0))
+        out["total_s"].append(res.timer.total)
+        print(f"[fig4] N={n:7d} total={res.timer.total:6.2f}s {res.timer}")
+    # log-log slope of total runtime vs N (jit caching makes later runs
+    # cheaper, so fit from the 2nd point)
+    ln_n = np.log(np.asarray(out["ns"][1:], float))
+    ln_t = np.log(np.maximum(np.asarray(out["total_s"][1:], float), 1e-9))
+    slope = float(np.polyfit(ln_n, ln_t, 1)[0])
+    out["loglog_slope"] = slope
+    print(f"[fig4] log-log slope = {slope:.2f} (1.0 = linear, 2.0 = quadratic)")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--max-n", type=int, default=16_000)
+    ap.add_argument("--out", default="bench_results/fig4.json")
+    args = ap.parse_args()
+    ns = [n for n in (1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000,
+                      128_000, 256_000)
+          if n <= args.max_n]
+    res = run(ns=tuple(ns))
+    import os
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

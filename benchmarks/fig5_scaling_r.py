@@ -1,0 +1,49 @@
+"""Paper Fig. 5: runtime scalability in the number of latent features R for
+the approximation methods across 4 datasets (linear-in-R check)."""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+
+from benchmarks.datasets import one
+from repro.core.baselines import METHODS, BaselineConfig
+
+DATASETS = ["pendigits", "letter", "ijcnn1", "covtype-mult"]
+FIG5_METHODS = ["sc_rb", "sc_rf", "sv_rf", "kk_rf", "kk_rs", "sc_nys", "sc_lsc"]
+
+
+def run(scale: float = 0.02, seed: int = 0, rs=(16, 32, 64, 128, 256)):
+    out = {"rs": list(rs), "datasets": {}}
+    for ds in DATASETS:
+        spec, x, y, sigma = one(ds, scale=scale, seed=seed)
+        xj = jnp.asarray(x)
+        per = {}
+        for name in FIG5_METHODS:
+            times = []
+            for r in rs:
+                cfg = BaselineConfig(n_clusters=spec.k, rank=r, sigma=sigma,
+                                     kmeans_replicates=2, seed=seed)
+                res = METHODS[name](xj, cfg)
+                times.append(res.timer.total)
+            per[name] = times
+        out["datasets"][ds] = {"n": x.shape[0], "times": per}
+        print(f"[fig5] {ds:14s} sc_rb={['%.2f' % t for t in per['sc_rb']]}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--out", default="bench_results/fig5.json")
+    args = ap.parse_args()
+    res = run(scale=args.scale)
+    import os
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

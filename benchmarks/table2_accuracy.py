@@ -1,0 +1,63 @@
+"""Paper Table 2 + Table 3: accuracy (4 metrics → average rank) and runtime
+for all 9 methods on the 8 paper-shaped datasets."""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.datasets import suite
+from repro.core import metrics as M
+from repro.core.baselines import METHODS, BaselineConfig
+
+# exact SC is O(N²·d) memory/compute — cap like the paper caps with '—'
+SC_EXACT_MAX_N = 4_000
+
+
+def run(scale: float = 0.02, rank: int = 256, seed: int = 0,
+        methods: List[str] | None = None) -> Dict:
+    methods = methods or list(METHODS)
+    results: Dict[str, Dict] = {}
+    for spec, x, y, sigma in suite(scale=scale, seed=seed):
+        xj = jnp.asarray(x)
+        per_method: Dict[str, Dict[str, float]] = {}
+        times: Dict[str, float] = {}
+        for name in methods:
+            if name == "sc" and x.shape[0] > SC_EXACT_MAX_N:
+                continue   # '—' in the paper's tables
+            cfg = BaselineConfig(
+                n_clusters=spec.k, rank=rank, sigma=sigma,
+                kmeans_replicates=4, seed=seed)
+            out = METHODS[name](xj, cfg)
+            per_method[name] = M.all_metrics(out.labels, y)
+            times[name] = out.timer.total
+        ranks = M.average_rank_scores(per_method)
+        results[spec.name] = {
+            "n": x.shape[0], "k": spec.k, "d": spec.d,
+            "metrics": per_method, "avg_rank": ranks, "time_s": times,
+        }
+        best = min(ranks, key=ranks.get)
+        print(f"[table2] {spec.name:14s} N={x.shape[0]:7d} "
+              f"best={best:7s} sc_rb_rank={ranks.get('sc_rb', -1):.2f} "
+              f"sc_rb_time={times.get('sc_rb', -1):.1f}s")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.02)
+    ap.add_argument("--rank", type=int, default=256)
+    ap.add_argument("--out", default="bench_results/table2.json")
+    args = ap.parse_args()
+    res = run(scale=args.scale, rank=args.rank)
+    import os
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+"""The paper's technique as a framework feature: cluster LM representations.
+
+Builds a topic-structured synthetic corpus (K latent topics, each with its
+own token distribution), embeds every document with a small in-framework LM
+(mean-pooled final hidden states), then runs distributed-grade SC_RB on the
+embeddings and checks the recovered clusters against the latent topics.
+
+This is the production shape of the pipeline: representation model →
+``repro.core.spectral_embed``/``sc_rb`` → labels (DESIGN.md §4).
+
+    PYTHONPATH=src python examples/embed_cluster.py [--docs 2000]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import SCRBConfig, metrics, sc_rb
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, dense_segments
+
+
+def topic_corpus(n_docs: int, seq: int, vocab: int, k: int, seed: int = 0):
+    """Each topic owns a sparse token bucket; docs sample from their topic."""
+    rng = np.random.default_rng(seed)
+    topics = rng.integers(0, k, size=n_docs)
+    buckets = np.array_split(rng.permutation(vocab), k)
+    docs = np.zeros((n_docs, seq), np.int32)
+    for i, t in enumerate(topics):
+        docs[i] = rng.choice(buckets[t], size=seq)
+    return docs, topics.astype(np.int32)
+
+
+def tiny_lm(vocab: int) -> ModelConfig:
+    return ModelConfig(
+        name="embedder-8m", family="dense", d_model=128, n_heads=4,
+        n_kv_heads=4, head_dim=32, d_ff=512, vocab_size=vocab,
+        segments=dense_segments(4), dtype="float32", remat="none",
+        attn_chunk=64, loss_chunk=512)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=2_000)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--topics", type=int, default=6)
+    args = ap.parse_args()
+    vocab = 4_096
+
+    docs, topics = topic_corpus(args.docs, args.seq, vocab, args.topics)
+    cfg = tiny_lm(vocab)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    # Brief LM pretraining on the corpus: random-init deep representations
+    # are topic-blind (rank collapse); a few hundred steps of next-token
+    # prediction make the pooled hidden states separate the latent topics —
+    # the realistic "embed with a trained model" setting.
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainer import TrainConfig, Trainer
+
+    def lm_batches():
+        rng = np.random.default_rng(1)
+        while True:
+            sel = rng.integers(0, args.docs, size=16)
+            toks = docs[sel]
+            yield {"tokens": jnp.asarray(toks[:, :-1]),
+                   "labels": jnp.asarray(toks[:, 1:])}
+
+    trainer = Trainer(cfg, TrainConfig(
+        opt=OptConfig(lr=3e-3, warmup_steps=10, total_steps=200),
+        log_every=50), params, lm_batches())
+    final = trainer.run(200)
+    params = trainer.params
+    print(f"pretrained embedder: {final['loss']:.3f} final LM loss")
+
+    @jax.jit
+    def embed(tokens):
+        h, _ = T.forward_hidden(cfg, params, {"tokens": tokens})
+        return h.mean(axis=1)                      # (B, D) mean-pool
+
+    embs = []
+    bs = 200
+    for i in range(0, args.docs, bs):
+        embs.append(np.asarray(embed(jnp.asarray(docs[i:i + bs]))))
+    x = np.concatenate(embs)
+    x = (x - x.mean(0)) / (x.std(0) + 1e-6)
+    print(f"embedded {x.shape[0]} docs into {x.shape[1]}-d space")
+
+    from repro.core.rb import suggest_sigma
+    sigma = suggest_sigma(x)
+    print(f"median-heuristic sigma = {sigma:.1f}")
+    res = sc_rb(jnp.asarray(x), SCRBConfig(
+        n_clusters=args.topics, n_grids=256, sigma=sigma,
+        kmeans_replicates=4))
+    m = metrics.all_metrics(res.labels, topics)
+    print("SC_RB on LM embeddings: "
+          + "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
+    print(res.timer)
+
+
+if __name__ == "__main__":
+    main()

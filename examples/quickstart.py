@@ -1,0 +1,42 @@
+"""Quickstart: scalable spectral clustering with Random Binning features.
+
+Runs SC_RB (the paper's Algorithm 2) on a non-convex two-ring dataset where
+plain k-means fails, and prints the 4 paper metrics + per-stage timings.
+
+    PYTHONPATH=src python examples/quickstart.py [--n 4000]
+"""
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import SCRBConfig, metrics, sc_rb
+from repro.core.baselines import METHODS, BaselineConfig
+from repro.data.synthetic import make_rings
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=4_000)
+    ap.add_argument("--grids", type=int, default=256, help="R, number of RB grids")
+    args = ap.parse_args()
+
+    x, y = make_rings(args.n, 2, seed=0)
+    xj = jnp.asarray(x)
+
+    res = sc_rb(xj, SCRBConfig(
+        n_clusters=2, n_grids=args.grids, sigma=0.15, kmeans_replicates=4))
+    m = metrics.all_metrics(res.labels, y)
+    print(f"SC_RB   : " + "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
+    print(f"  stages: {res.timer}")
+    print(f"  diagnostics: D={res.diagnostics['n_features_D']}, "
+          f"nnz={res.diagnostics['nnz']}, "
+          f"eigensolver iters={res.diagnostics['solver_iterations']}")
+
+    km = METHODS["kmeans"](xj, BaselineConfig(n_clusters=2, kmeans_replicates=4))
+    mk = metrics.all_metrics(km.labels, y)
+    print(f"k-means : " + "  ".join(f"{k}={v:.3f}" for k, v in mk.items())
+          + "   <- fails on non-convex clusters, as in the paper's motivation")
+
+
+if __name__ == "__main__":
+    main()

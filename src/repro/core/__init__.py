@@ -1,0 +1,25 @@
+"""The paper's primary contribution: scalable spectral clustering with
+Random Binning features (SC_RB) — KDD'18, Wu et al.
+
+Public API:
+  - ``SCRBConfig`` / ``sc_rb`` / ``spectral_embed``     (Alg. 2)
+  - ``make_rb_params`` / ``rb_transform``               (Alg. 1)
+  - ``build_normalized_adjacency``                      (Eq. 5/6)
+  - ``top_k_eigenpairs``                                (PRIMME-analogue solvers)
+  - ``kmeans``                                          (final stage)
+  - ``baselines.METHODS``                               (the paper's 8 baselines)
+  - ``metrics.all_metrics`` / ``average_rank_scores``   (Table 2 protocol)
+"""
+from repro.core.rb import (  # noqa: F401
+    RBParams, make_rb_params, rb_transform, laplacian_kernel, gaussian_kernel,
+    expected_nonempty_bins,
+)
+from repro.core.graph import (  # noqa: F401
+    NormalizedAdjacency, build_normalized_adjacency, rb_degrees,
+)
+from repro.core.eigensolver import (  # noqa: F401
+    EigResult, lobpcg, lanczos, subspace_iteration, top_k_eigenpairs,
+)
+from repro.core.kmeans import KMeansResult, kmeans, row_normalize  # noqa: F401
+from repro.core.pipeline import SCRBConfig, SCRBResult, sc_rb, spectral_embed  # noqa: F401
+from repro.core import baselines, metrics  # noqa: F401

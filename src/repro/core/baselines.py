@@ -1,0 +1,224 @@
+"""The paper's 8 comparison methods (Table 2/3), implemented in JAX.
+
+  K-means  — Lloyd on raw X                                  [15]
+  SC       — exact spectral clustering (dense W, eigh)       [21]
+  KK_RS    — approximate kernel k-means via random sampling  [10]
+  KK_RF    — k-means directly on the RFF feature matrix      [11]
+  SV_RF    — k-means on top singular vectors of RFF matrix   [11]
+  SC_LSC   — landmark bipartite-graph SC                     [9]
+  SC_Nys   — Nyström-approximated SC                         [13]
+  SC_RF    — SC with the RFF-approximated Laplacian          (paper's variant)
+  SC_RB    — this paper (repro.core.pipeline)
+
+All methods share the seed / k-means protocol so differences come from the
+approximation, mirroring the paper's controlled setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import kmeans as _kmeans, row_normalize
+from repro.core import nystrom, pipeline, rff
+from repro.utils import StageTimer, fold_key
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    n_clusters: int
+    rank: int = 256               # R: features / landmarks / samples budget
+    sigma: float = 1.0
+    kernel: str = "laplacian"     # kernel family for all kernel methods
+    kmeans_iters: int = 25
+    kmeans_replicates: int = 10
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    labels: np.ndarray
+    timer: StageTimer
+
+
+def _finish_kmeans(key, emb, cfg: BaselineConfig, timer: StageTimer) -> np.ndarray:
+    with timer.stage("kmeans"):
+        res = _kmeans(
+            key, emb, cfg.n_clusters,
+            n_iters=cfg.kmeans_iters, n_replicates=cfg.kmeans_replicates,
+        )
+        labels = np.asarray(jax.block_until_ready(res.labels))
+    return labels
+
+
+def _dense_feature_sc(phi: jax.Array, k: int, *, normalize_laplacian: bool,
+                      eps: float = 1e-8) -> jax.Array:
+    """Spectral embedding from a dense feature matrix Φ with ΦΦᵀ ≈ W.
+
+    With Laplacian normalization: top-K left singular vectors of
+    D^{-1/2}Φ where D = diag(Φ(Φᵀ1)) — the same math as SC_RB but dense.
+    Without: top-K left singular vectors of Φ itself (SV_RF).
+    Uses the (R×R) Gram eigendecomposition — exact for R ≪ N.
+    """
+    if normalize_laplacian:
+        deg = phi @ (phi.T @ jnp.ones((phi.shape[0],), phi.dtype))
+        scale = 1.0 / jnp.sqrt(jnp.maximum(deg, eps))
+        phi = phi * scale[:, None]
+    gram = phi.T @ phi                                     # (R, R)
+    lam, v = jnp.linalg.eigh(gram)
+    top = jnp.arange(gram.shape[0] - k, gram.shape[0])[::-1]
+    sig = jnp.sqrt(jnp.maximum(lam[top], eps))
+    u = (phi @ v[:, top]) / sig[None, :]
+    return row_normalize(u)
+
+
+# ---------------------------------------------------------------------------
+# methods
+# ---------------------------------------------------------------------------
+
+def kmeans_raw(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    timer = StageTimer()
+    labels = _finish_kmeans(
+        fold_key(jax.random.PRNGKey(cfg.seed), "kmeans"),
+        x.astype(jnp.float32), cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def sc_exact(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """Dense W + full eigh — O(N²) memory / O(N³): small N only (paper: '—')."""
+    timer = StageTimer()
+    key = jax.random.PRNGKey(cfg.seed)
+    with timer.stage("graph"):
+        if cfg.kernel == "gaussian":
+            sq = (jnp.sum(x * x, -1)[:, None] - 2 * x @ x.T
+                  + jnp.sum(x * x, -1)[None, :])
+            w = jnp.exp(-jnp.maximum(sq, 0) / (2 * cfg.sigma**2))
+        else:
+            l1 = jnp.sum(jnp.abs(x[:, None, :] - x[None, :, :]), -1)
+            w = jnp.exp(-l1 / cfg.sigma)
+        deg = jnp.sum(w, axis=1)
+        scale = 1.0 / jnp.sqrt(jnp.maximum(deg, 1e-12))
+        a_norm = w * scale[:, None] * scale[None, :]
+        a_norm = jax.block_until_ready(a_norm)
+    with timer.stage("eig"):
+        _, vecs = jnp.linalg.eigh(a_norm)                  # ascending
+        u = vecs[:, -cfg.n_clusters:]
+        u = jax.block_until_ready(row_normalize(u))
+    labels = _finish_kmeans(fold_key(key, "kmeans"), u, cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def _rff_phi(x, cfg: BaselineConfig, timer: StageTimer) -> jax.Array:
+    with timer.stage("features"):
+        params = rff.make_rff_params(
+            fold_key(jax.random.PRNGKey(cfg.seed), "rff"),
+            cfg.rank, x.shape[1], cfg.sigma, kernel=cfg.kernel)
+        phi = jax.block_until_ready(rff.rff_transform(x, params))
+    return phi
+
+
+def kk_rf(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """Kernel k-means directly on the dense RFF matrix (N × R)."""
+    timer = StageTimer()
+    phi = _rff_phi(x, cfg, timer)
+    labels = _finish_kmeans(
+        fold_key(jax.random.PRNGKey(cfg.seed), "kmeans"), phi, cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def sv_rf(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """k-means on the top-K left singular vectors of the RFF matrix (W approx)."""
+    timer = StageTimer()
+    phi = _rff_phi(x, cfg, timer)
+    with timer.stage("svd"):
+        u = jax.block_until_ready(
+            _dense_feature_sc(phi, cfg.n_clusters, normalize_laplacian=False))
+    labels = _finish_kmeans(
+        fold_key(jax.random.PRNGKey(cfg.seed), "kmeans"), u, cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def sc_rf(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """SC on the RFF-approximated normalized Laplacian (L approx)."""
+    timer = StageTimer()
+    phi = _rff_phi(x, cfg, timer)
+    with timer.stage("svd"):
+        u = jax.block_until_ready(
+            _dense_feature_sc(phi, cfg.n_clusters, normalize_laplacian=True))
+    labels = _finish_kmeans(
+        fold_key(jax.random.PRNGKey(cfg.seed), "kmeans"), u, cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def kk_rs(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """Approximate kernel k-means by random sampling [10]: centroids are
+    restricted to the span of `rank` sampled points ⇒ k-means in the sampled
+    Nyström feature space."""
+    timer = StageTimer()
+    key = jax.random.PRNGKey(cfg.seed)
+    with timer.stage("features"):
+        phi = jax.block_until_ready(nystrom.nystrom_features(
+            fold_key(key, "sample"), x.astype(jnp.float32),
+            n_landmarks=min(cfg.rank, x.shape[0] // 2),
+            sigma=cfg.sigma, kernel=cfg.kernel))
+    labels = _finish_kmeans(fold_key(key, "kmeans"), phi, cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def sc_nys(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """SC with the Nyström-approximated W (+ Laplacian normalization)."""
+    timer = StageTimer()
+    key = jax.random.PRNGKey(cfg.seed)
+    with timer.stage("features"):
+        phi = jax.block_until_ready(nystrom.nystrom_features(
+            fold_key(key, "nys"), x.astype(jnp.float32),
+            n_landmarks=min(cfg.rank, x.shape[0] // 2),
+            sigma=cfg.sigma, kernel=cfg.kernel))
+    with timer.stage("svd"):
+        u = jax.block_until_ready(
+            _dense_feature_sc(phi, cfg.n_clusters, normalize_laplacian=True))
+    labels = _finish_kmeans(fold_key(key, "kmeans"), u, cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def sc_lsc(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """Landmark-based SC (LSC): s-NN bipartite graph to anchors."""
+    timer = StageTimer()
+    key = jax.random.PRNGKey(cfg.seed)
+    with timer.stage("features"):
+        zbar = jax.block_until_ready(nystrom.lsc_bipartite_features(
+            fold_key(key, "lsc"), x.astype(jnp.float32),
+            n_anchors=min(cfg.rank, x.shape[0] // 2),
+            n_nearest=min(5, min(cfg.rank, x.shape[0] // 2)),
+            sigma=cfg.sigma, kernel=cfg.kernel))
+    with timer.stage("svd"):
+        u = jax.block_until_ready(
+            _dense_feature_sc(zbar, cfg.n_clusters, normalize_laplacian=True))
+    labels = _finish_kmeans(fold_key(key, "kmeans"), u, cfg, timer)
+    return BaselineResult(labels, timer)
+
+
+def sc_rb_baseline(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """This paper, under the shared baseline protocol."""
+    res = pipeline.sc_rb(x, pipeline.SCRBConfig(
+        n_clusters=cfg.n_clusters, n_grids=cfg.rank, sigma=cfg.sigma,
+        kmeans_iters=cfg.kmeans_iters,
+        kmeans_replicates=cfg.kmeans_replicates, seed=cfg.seed,
+    ))
+    return BaselineResult(res.labels, res.timer)
+
+
+METHODS: Dict[str, Callable[[jax.Array, BaselineConfig], BaselineResult]] = {
+    "kmeans": kmeans_raw,
+    "sc": sc_exact,
+    "kk_rs": kk_rs,
+    "kk_rf": kk_rf,
+    "sv_rf": sv_rf,
+    "sc_lsc": sc_lsc,
+    "sc_nys": sc_nys,
+    "sc_rf": sc_rf,
+    "sc_rb": sc_rb_baseline,
+}

@@ -1,0 +1,153 @@
+"""Distributed SC_RB: the paper's pipeline as SPMD over a (pod, data) mesh.
+
+Communication pattern (DESIGN.md §3.4) — per eigensolver iteration exactly one
+all-reduce of the (D, K) projected block:
+
+  rows of X / Z.idx / U       → sharded over the data axes (pod, data)
+  q = Ẑᵀ·u                    → local ELL product + psum over data axes
+  y = Ẑ·q                     → purely local (q replicated after psum)
+  k-means centroid update     → local segment-sum + psum (GSPMD-inserted)
+
+The Gram mat-vec is written with ``shard_map`` so the collective schedule is
+explicit and auditable, not left to the partitioner; everything else (LOBPCG
+dense algebra, k-means) relies on GSPMD propagation from the row sharding.
+RB grid parameters are derived from the seed, so every host materializes
+identical grids with zero communication.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import eigensolver, rb
+from repro.core.kmeans import kmeans as _kmeans, row_normalize
+from repro.core.pipeline import SCRBConfig
+from repro.kernels import ops
+from repro.utils import StageTimer, fold_key
+
+
+def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def make_gram_matvec(mesh: Mesh, idx: jax.Array, rowscale: jax.Array,
+                     d: int, d_g: int, impl: str = "auto",
+                     compress: bool = False):
+    """Row-sharded Â·u mat-vec with an explicit psum over the data axes.
+
+    ``compress=True`` runs the (D, K) all-reduce payload in bf16 (halving THE
+    collective of this workload); the local partial sums and the subsequent
+    gather stay fp32, so only the single reduction is rounded — measured
+    harmless for clustering quality (tests/test_distributed.py) and the Ritz
+    values converge identically at tol 1e-4 (§Perf).
+    """
+    axes = _data_axes(mesh)
+    row_spec = P(axes if len(axes) > 1 else axes[0])
+
+    @functools.partial(
+        jax.shard_map, mesh=mesh,
+        in_specs=(P(row_spec[0], None), P(row_spec[0], None), row_spec),
+        out_specs=P(row_spec[0], None),
+        check_vma=False)   # kernels allocate unvarying scan carries internally
+    def gram(u_local, idx_local, scale_local):
+        q = ops.zt_matmul(idx_local, u_local, scale_local, d,
+                          d_g=d_g, impl=impl)          # local partial (D, K)
+        if compress:
+            q = jax.lax.psum(q.astype(jnp.bfloat16), axes).astype(jnp.float32)
+        else:
+            q = jax.lax.psum(q, axes)                  # THE collective
+        return ops.z_matmul(idx_local, q, scale_local, d_g=d_g, impl=impl)
+
+    return lambda u: gram(u, idx, rowscale)
+
+
+def sc_rb_distributed(
+    x: np.ndarray | jax.Array,
+    config: SCRBConfig,
+    mesh: Mesh,
+) -> Tuple[np.ndarray, StageTimer]:
+    """Algorithm 2 on a multi-device mesh; returns (labels, stage timer)."""
+    cfg = config
+    key = jax.random.PRNGKey(cfg.seed)
+    timer = StageTimer()
+    n, dim = x.shape
+    axes = _data_axes(mesh)
+    row_shard = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0], None))
+    scale_shard = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+
+    with timer.stage("rb_features"):
+        d_g = cfg.d_g or rb.suggest_d_g(np.asarray(x), cfg.sigma,
+                                        key=fold_key(key, "probe"))
+        params = rb.make_rb_params(fold_key(key, "rb"), cfg.n_grids, dim,
+                                   cfg.sigma, d_g)
+        xs = jax.device_put(jnp.asarray(x, jnp.float32), row_shard)
+        with mesh:
+            idx = jax.jit(
+                lambda a: rb.rb_transform(a, params, impl=cfg.impl),
+                out_shardings=row_shard)(xs)
+            idx = jax.block_until_ready(idx)
+    d = params.n_features
+
+    with timer.stage("degrees"):
+        ones = jax.device_put(jnp.ones((n, 1), jnp.float32), row_shard)
+        inv_sqrt_r = jnp.full((n,), 1.0 / np.sqrt(cfg.n_grids), jnp.float32)
+        inv_sqrt_r = jax.device_put(inv_sqrt_r, scale_shard)
+        with mesh:
+            deg_mv = make_gram_matvec(mesh, idx, inv_sqrt_r, d, d_g, cfg.impl)
+            deg = jax.jit(lambda: deg_mv(ones)[:, 0])()
+            rowscale = 1.0 / jnp.sqrt(cfg.n_grids * jnp.maximum(deg, 1e-8))
+            rowscale = jax.block_until_ready(
+                jax.lax.with_sharding_constraint(rowscale, scale_shard))
+
+    with timer.stage("svd"):
+        with mesh:
+            matvec = make_gram_matvec(mesh, idx, rowscale, d, d_g, cfg.impl)
+            k = cfg.n_clusters
+            b = k + cfg.solver_buffer
+            x0 = jax.device_put(
+                jax.random.normal(fold_key(key, "eig"), (n, b), jnp.float32),
+                row_shard)
+            eig = jax.jit(functools.partial(
+                eigensolver.lobpcg, matvec,
+                max_iters=cfg.solver_iters, tol=cfg.solver_tol))(x0)
+            u = jax.block_until_ready(eig.vectors[:, :k])
+
+    with timer.stage("kmeans"):
+        with mesh:
+            u_hat = jax.lax.with_sharding_constraint(
+                row_normalize(u), row_shard)
+            res = _kmeans(fold_key(key, "kmeans"), u_hat, cfg.n_clusters,
+                          n_iters=cfg.kmeans_iters,
+                          n_replicates=cfg.kmeans_replicates, impl=cfg.impl)
+            labels = jax.block_until_ready(res.labels)
+    return np.asarray(labels), timer
+
+
+def lower_clustering_cell(mesh: Mesh, *, n: int, dim: int, k: int,
+                          n_grids: int, d_g: int, compress: bool = False):
+    """Lower the distributed eigensolver iteration for roofline analysis
+    (the paper-technique cell of EXPERIMENTS.md §Roofline)."""
+    axes = _data_axes(mesh)
+    row = P(axes if len(axes) > 1 else axes[0], None)
+    vec = P(axes if len(axes) > 1 else axes[0])
+    d = n_grids * d_g
+    idx = jax.ShapeDtypeStruct((n, n_grids), jnp.int32)
+    scale = jax.ShapeDtypeStruct((n,), jnp.float32)
+    u = jax.ShapeDtypeStruct((n, k), jnp.float32)
+
+    def one_iteration(idx, scale, u):
+        mv = make_gram_matvec(mesh, idx, scale, d, d_g, impl="xla",
+                              compress=compress)
+        return mv(u)
+
+    ns = lambda s: NamedSharding(mesh, s)
+    with mesh:
+        return jax.jit(one_iteration,
+                       in_shardings=(ns(row), ns(vec), ns(row))
+                       ).lower(idx, scale, u)

@@ -1,0 +1,81 @@
+"""Implicit similarity graph and normalized Laplacian built on RB features.
+
+Never materializes W = Z Zᵀ. Degrees come from two sparse mat-vecs (Eq. 6):
+``deg = Z (Zᵀ 1)``; with Z values 1/√R in ELL form this reduces to bin-count
+lookups. The normalized operator ``Ẑ = D̂^{-1/2} Z`` is represented by
+(idx, rowscale) where ``rowscale_i = 1/sqrt(R·deg_i)`` — one fused per-row
+scalar for both the 1/√R value and the degree normalization.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def rb_degrees(idx: jax.Array, *, d: int, d_g: int, impl: str = "auto") -> jax.Array:
+    """deg_i = (1/R) Σ_g counts_g[idx[i,g]]  — Eq. 6 via two ELL products."""
+    n, r = idx.shape
+    ones = jnp.ones((n, 1), jnp.float32)
+    inv_sqrt_r = 1.0 / jnp.sqrt(jnp.float32(r))
+    scale = jnp.full((n,), inv_sqrt_r, jnp.float32)
+    counts = ops.zt_matmul(idx, ones, scale, d, d_g=d_g, impl=impl)   # Zᵀ1 (D,1)
+    deg = ops.z_matmul(idx, counts, scale, d_g=d_g, impl=impl)        # Z(Zᵀ1)
+    return deg[:, 0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class NormalizedAdjacency:
+    """Â = Ẑ Ẑᵀ = D̂^{-1/2} Z Zᵀ D̂^{-1/2}, applied implicitly.
+
+    The K largest eigenpairs of Â are the K smallest of L̂ = I − Â; its top-K
+    left singular vectors of Ẑ are the spectral embedding (paper Eq. 7).
+    """
+
+    idx: jax.Array        # (N, R) int32 ELL columns
+    rowscale: jax.Array   # (N,) float32 = 1/sqrt(R·deg)
+    deg: jax.Array        # (N,) float32 degrees (diagnostics)
+    d: int                # feature columns D
+    d_g: int
+    impl: str = "auto"
+
+    @property
+    def n(self) -> int:
+        return self.idx.shape[0]
+
+    def rmatmat(self, u: jax.Array) -> jax.Array:
+        """Ẑᵀ u : (N, K) → (D, K)."""
+        return ops.zt_matmul(self.idx, u, self.rowscale, self.d,
+                             d_g=self.d_g, impl=self.impl)
+
+    def matmat(self, v: jax.Array) -> jax.Array:
+        """Ẑ v : (D, K) → (N, K)."""
+        return ops.z_matmul(self.idx, v, self.rowscale, d_g=self.d_g,
+                            impl=self.impl)
+
+    def gram_matvec(self, u: jax.Array) -> jax.Array:
+        """(Ẑ Ẑᵀ) u — the eigensolver operator. PSD, ‖Â‖ ≤ 1."""
+        return self.matmat(self.rmatmat(u))
+
+    def tree_flatten(self):
+        return (self.idx, self.rowscale, self.deg), (self.d, self.d_g, self.impl)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        d, d_g, impl = aux
+        return cls(*leaves, d=d, d_g=d_g, impl=impl)
+
+
+def build_normalized_adjacency(
+    idx: jax.Array, *, d: int, d_g: int, impl: str = "auto", eps: float = 1e-8
+) -> NormalizedAdjacency:
+    n, r = idx.shape
+    deg = rb_degrees(idx, d=d, d_g=d_g, impl=impl)
+    # deg_i ≥ 1/R·counts of own bin ≥ 1/R > 0 always (a point collides with
+    # itself); eps guards degenerate all-padded rows only.
+    rowscale = 1.0 / jnp.sqrt(jnp.float32(r) * jnp.maximum(deg, eps))
+    return NormalizedAdjacency(idx, rowscale, deg, d=d, d_g=d_g, impl=impl)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+- ``rb_binning``   — hashed Random Binning feature generation (Alg. 1)
+- ``ell_spmm``     — Z·v / Zᵀ·u products driving the eigensolver (Alg. 2 step 3)
+- ``kmeans_assign``— fused distance+argmin for the final k-means (Alg. 2 step 5)
+
+``ops.py`` holds the jit'd public wrappers (+ XLA fallbacks); ``ref.py`` the
+pure-jnp oracles used by the allclose test sweeps.
+"""
+from repro.kernels import ops, ref  # noqa: F401

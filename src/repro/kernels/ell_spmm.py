@@ -1,0 +1,129 @@
+"""Pallas TPU kernels for the ELL sparse products in the SC_RB eigensolver.
+
+The eigensolver inner loop (DESIGN.md §3.2/§3.3) is dominated by
+``q = Ẑᵀ·u`` (scatter-add) and ``y = Ẑ·q`` (gather) over the RB feature
+matrix Z stored in ELL form: ``idx int32 (N, R)``, one nonzero per (row,
+grid), structural value 1 (the 1/√R·deg^{-1/2} weights are folded into a
+per-row scale).
+
+TPU has no efficient scatter, so both kernels use the MoE-dispatch trick:
+grid ``g`` owns the column strip ``[g·d_g, (g+1)·d_g)``, and inside a block we
+contract a register-materialized one-hot matrix against the dense factor on
+the **MXU** — scatter/gather become dense matmuls with block-diagonal
+structure. Per-program VMEM: one (block_n, d_g) one-hot tile (re-materialized
+per grid slice), the (d_g·block_r, K) dense strip, and the accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _z_matmul_kernel(idx_ref, v_ref, s_ref, out_ref, *, d_g, block_r):
+    """out[i, :] += s[i] · Σ_r V[idx[i, r], :] for this grid-chunk's strip."""
+    g = pl.program_id(1)
+    base = g * block_r * d_g
+    idx = idx_ref[...] - base                       # (bn, br), local to strip
+    scale = s_ref[...][:, 0]                        # (bn,)
+
+    @pl.when(g == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    acc = jnp.zeros_like(out_ref)
+    for r in range(block_r):                        # static unroll
+        local = idx[:, r] - r * d_g                 # [0, d_g)
+        onehot = jax.nn.one_hot(local, d_g, dtype=v_ref.dtype)     # (bn, d_g)
+        strip = v_ref[r * d_g:(r + 1) * d_g, :]                    # (d_g, K)
+        acc = acc + jax.lax.dot(
+            onehot, strip, preferred_element_type=out_ref.dtype
+        )
+    out_ref[...] += acc * scale[:, None].astype(out_ref.dtype)
+
+
+def _zt_matmul_kernel(idx_ref, u_ref, s_ref, out_ref, *, d_g, block_r):
+    """out[strip, :] += Σ_i onehotᵀ · (s[i]·u[i, :]) accumulated over N tiles."""
+    j = pl.program_id(1)
+    base = pl.program_id(0) * block_r * d_g
+    idx = idx_ref[...] - base                       # (bn, br)
+    us = u_ref[...] * s_ref[...][:, 0:1].astype(u_ref.dtype)       # (bn, K)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    for r in range(block_r):
+        local = idx[:, r] - r * d_g
+        onehot = jax.nn.one_hot(local, d_g, dtype=u_ref.dtype)     # (bn, d_g)
+        contrib = jax.lax.dot(
+            onehot.T, us, preferred_element_type=out_ref.dtype
+        )                                                          # (d_g, K)
+        out_ref[r * d_g:(r + 1) * d_g, :] += contrib
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d_g", "block_n", "block_r", "interpret")
+)
+def z_matmul_pallas(
+    idx: jax.Array,       # (N, R) int32
+    v: jax.Array,         # (D, K) float, D = R·d_g
+    rowscale: jax.Array,  # (N,) float
+    *,
+    d_g: int,
+    block_n: int = 128,
+    block_r: int = 4,
+    interpret: bool = True,
+) -> jax.Array:
+    n, r = idx.shape
+    d, k = v.shape
+    assert d == r * d_g and n % block_n == 0 and r % block_r == 0
+    grid = (n // block_n, r // block_r)  # out accumulates over axis 1
+    kern = functools.partial(_z_matmul_kernel, d_g=d_g, block_r=block_r)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_r), lambda i, g: (i, g)),
+            pl.BlockSpec((block_r * d_g, k), lambda i, g: (g, 0)),
+            pl.BlockSpec((block_n, 1), lambda i, g: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i, g: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), v.dtype),
+        interpret=interpret,
+    )(idx, v, rowscale[:, None].astype(v.dtype))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "d_g", "block_n", "block_r", "interpret")
+)
+def zt_matmul_pallas(
+    idx: jax.Array,       # (N, R) int32
+    u: jax.Array,         # (N, K) float
+    rowscale: jax.Array,  # (N,) float
+    d: int,
+    *,
+    d_g: int,
+    block_n: int = 128,
+    block_r: int = 4,
+    interpret: bool = True,
+) -> jax.Array:
+    n, r = idx.shape
+    k = u.shape[1]
+    assert d == r * d_g and n % block_n == 0 and r % block_r == 0
+    grid = (r // block_r, n // block_n)  # out accumulates over axis 1 (N tiles)
+    kern = functools.partial(_zt_matmul_kernel, d_g=d_g, block_r=block_r)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_r), lambda g, j: (j, g)),
+            pl.BlockSpec((block_n, k), lambda g, j: (j, 0)),
+            pl.BlockSpec((block_n, 1), lambda g, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r * d_g, k), lambda g, j: (g, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, k), u.dtype),
+        interpret=interpret,
+    )(idx, u, rowscale[:, None].astype(u.dtype))

@@ -1,0 +1,114 @@
+"""Pallas TPU flash attention (forward): online-softmax tiling so the
+(S × T) score/prob matrices never round-trip HBM.
+
+Motivation (EXPERIMENTS.md §Roofline): the XLA attention path materializes
+per-chunk fp32 scores in HBM — the dominant memory-term contributor for
+every attention arch at 4k/32k sequence. This kernel streams K/V blocks
+through VMEM with running (m, l) statistics; HBM traffic drops to the
+Q/K/V/O tensors themselves. Serving prefill is forward-only, so this is the
+deployment path for the prefill_32k cells; training would add the standard
+flash backward (future work, noted in DESIGN.md).
+
+Layout: (B, H, S, hd) with grid (B·H, S/block_q, T/block_kv), KV innermost —
+TPU grids execute sequentially, so VMEM scratch carries the running
+accumulator across KV blocks of one Q block.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  block_q: int, block_kv: int, n_kv: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]                                     # (bq, hd)
+    k = k_ref[0]                                     # (bkv, hd)
+    v = v_ref[0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale  # (bq, bkv)
+
+    qpos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = kb * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    allow = jnp.ones_like(s, dtype=jnp.bool_)
+    if causal:
+        allow &= kpos <= qpos
+    if window is not None:
+        allow &= kpos > qpos - window
+    s = jnp.where(allow, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # (bq, 1)
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                           # (bq, bkv)
+    alpha = jnp.exp(m_prev - m_new)                  # (bq, 1)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jax.lax.dot(p.astype(v.dtype), v,
+                                  preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kb == n_kv - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_kv", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,                 # (BH, S, hd)
+    k: jax.Array,                 # (BH, T, hd)
+    v: jax.Array,                 # (BH, T, hd)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 256,
+    block_kv: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    bh, s, hd = q.shape
+    t = k.shape[1]
+    assert s % block_q == 0 and t % block_kv == 0, (s, t, block_q, block_kv)
+    n_kv = t // block_kv
+    scale = 1.0 / math.sqrt(hd)
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        grid=(bh, s // block_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

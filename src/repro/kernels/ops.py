@@ -1,0 +1,260 @@
+"""Jit'd public wrappers for the Pallas kernels, with XLA production fallbacks.
+
+Dispatch policy (``impl``):
+  - ``"pallas"``  — the Pallas kernel. On TPU this compiles to Mosaic; on CPU
+    it runs in ``interpret=True`` (used by the correctness tests).
+  - ``"xla"``     — pure-XLA implementation with bounded memory (chunked
+    scans / segment_sum). This is the production path on CPU/GPU and the
+    baseline the Pallas path is validated against.
+  - ``"auto"``    — ``"pallas"`` on TPU backends, ``"xla"`` elsewhere.
+
+All wrappers handle ragged shapes by padding to the kernel tiling and
+slicing back, so callers never need to know block sizes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ell_spmm, kmeans_assign as _kmeans_kernel, rb_binning as _rb_kernel
+from repro.kernels.ref import HASH_MIX
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+def _pad_rows(a: jax.Array, mult: int, fill=0):
+    n = a.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return a, n
+    widths = [(0, pad)] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, widths, constant_values=fill), n
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+# --------------------------------------------------------------------------
+# RB binning
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("d_g", "r_chunk"))
+def _rb_binning_xla(x, widths, biases, hash_a, hash_c, *, d_g, r_chunk=32):
+    """Chunked-over-grids XLA path: O(N·r_chunk·d) peak temp memory."""
+    shift = 32 - int(d_g).bit_length() + 1
+    r = widths.shape[0]
+    assert r % r_chunk == 0
+    nchunk = r // r_chunk
+
+    def body(_, args):
+        w, b, a, c, offs = args           # (rc, d), ..., (rc,)
+        bins = jnp.floor((x[:, None, :] - b[None, :, :]) / w[None, :, :])
+        bins_u = bins.astype(jnp.int32).astype(jnp.uint32)
+        h = jnp.sum(bins_u * a[None, :, :], axis=-1, dtype=jnp.uint32)
+        h = (h + c[None, :]) * HASH_MIX
+        local = (h >> jnp.uint32(shift)).astype(jnp.int32)
+        return None, local + offs[None, :] * d_g
+
+    resh = lambda t: t.reshape((nchunk, r_chunk) + t.shape[1:])
+    offs = jnp.arange(r, dtype=jnp.int32)
+    _, cols = jax.lax.scan(
+        body, None,
+        (resh(widths), resh(biases), resh(hash_a), resh(hash_c), resh(offs)),
+    )
+    # (nchunk, N, r_chunk) -> (N, R)
+    return jnp.transpose(cols, (1, 0, 2)).reshape(x.shape[0], r)
+
+
+def rb_binning(
+    x: jax.Array,
+    widths: jax.Array,
+    biases: jax.Array,
+    hash_a: jax.Array,
+    hash_c: jax.Array,
+    *,
+    d_g: int,
+    impl: str = "auto",
+) -> jax.Array:
+    """ELL column indices of the hashed RB feature matrix: int32 (N, R)."""
+    impl = _resolve(impl)
+    r = widths.shape[0]
+    if impl == "xla":
+        return _rb_binning_xla(
+            x, widths, biases, hash_a, hash_c,
+            d_g=d_g, r_chunk=_largest_divisor(r, 32),
+        )
+    block_n = _largest_divisor_pow2_cap(x.shape[0], 256)
+    xp, n = _pad_rows(x, block_n)
+    out = _rb_kernel.rb_binning_pallas(
+        xp, widths, biases, hash_a, hash_c,
+        d_g=d_g,
+        block_n=block_n,
+        block_r=_largest_divisor(r, 8),
+        interpret=not _on_tpu(),
+    )
+    return out[:n]
+
+
+def _largest_divisor_pow2_cap(n: int, cap: int) -> int:
+    """Largest power-of-two divisor of padded n, capped. Padding makes any
+    cap valid, so just return the cap (callers pad to it)."""
+    return cap
+
+
+# --------------------------------------------------------------------------
+# ELL spmm: y = diag(s)·Z·v   and   q = Zᵀ·diag(s)·u
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("r_chunk",))
+def _z_matmul_xla(idx, v, rowscale, *, r_chunk):
+    n, r = idx.shape
+    k = v.shape[1]
+    nchunk = r // r_chunk
+
+    def body(acc, cols):                  # cols: (N, r_chunk)
+        gathered = jnp.take(v, cols, axis=0)          # (N, r_chunk, K)
+        return acc + jnp.sum(gathered, axis=1), None
+
+    idx_c = jnp.transpose(idx.reshape(n, nchunk, r_chunk), (1, 0, 2))
+    acc, _ = jax.lax.scan(body, jnp.zeros((n, k), v.dtype), idx_c)
+    return acc * rowscale[:, None].astype(v.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "r_chunk"))
+def _zt_matmul_xla(idx, u, rowscale, *, d, r_chunk):
+    n, r = idx.shape
+    k = u.shape[1]
+    nchunk = r // r_chunk
+    us = u * rowscale[:, None].astype(u.dtype)
+
+    def body(acc, cols):                  # cols: (N, r_chunk)
+        flat = cols.reshape(-1)                                  # (N·rc,)
+        data = jnp.broadcast_to(us[:, None, :], (n, r_chunk, k)).reshape(-1, k)
+        return acc + jax.ops.segment_sum(data, flat, num_segments=d), None
+
+    idx_c = jnp.transpose(idx.reshape(n, nchunk, r_chunk), (1, 0, 2))
+    acc, _ = jax.lax.scan(body, jnp.zeros((d, k), u.dtype), idx_c)
+    return acc
+
+
+def z_matmul(
+    idx: jax.Array,
+    v: jax.Array,
+    rowscale: jax.Array,
+    *,
+    d_g: int,
+    impl: str = "auto",
+) -> jax.Array:
+    """y = diag(rowscale) · Z_pattern · v.  (N, K)."""
+    impl = _resolve(impl)
+    r = idx.shape[1]
+    if impl == "xla":
+        return _z_matmul_xla(idx, v, rowscale, r_chunk=_largest_divisor(r, 8))
+    block_n = 128
+    idx_p, n = _pad_rows(idx, block_n)
+    s_p, _ = _pad_rows(rowscale, block_n)
+    out = ell_spmm.z_matmul_pallas(
+        idx_p, v, s_p, d_g=d_g,
+        block_n=block_n, block_r=_largest_divisor(r, 4),
+        interpret=not _on_tpu(),
+    )
+    return out[:n]
+
+
+def zt_matmul(
+    idx: jax.Array,
+    u: jax.Array,
+    rowscale: jax.Array,
+    d: int,
+    *,
+    d_g: int,
+    impl: str = "auto",
+) -> jax.Array:
+    """q = Z_patternᵀ · diag(rowscale) · u.  (D, K)."""
+    impl = _resolve(impl)
+    r = idx.shape[1]
+    if impl == "xla":
+        return _zt_matmul_xla(idx, u, rowscale, d=d, r_chunk=_largest_divisor(r, 8))
+    block_n = 128
+    idx_p, _ = _pad_rows(idx, block_n)
+    u_p, _ = _pad_rows(u, block_n)
+    s_p, _ = _pad_rows(rowscale, block_n)   # pad scale with 0 ⇒ no contribution
+    return ell_spmm.zt_matmul_pallas(
+        idx_p, u_p, s_p, d, d_g=d_g,
+        block_n=block_n, block_r=_largest_divisor(r, 4),
+        interpret=not _on_tpu(),
+    )
+
+
+# --------------------------------------------------------------------------
+# k-means assignment
+# --------------------------------------------------------------------------
+
+@jax.jit
+def _kmeans_assign_xla(x, centroids):
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(centroids * centroids, axis=-1)
+    d2 = x2 - 2.0 * x @ centroids.T + c2[None, :]
+    return (
+        jnp.argmin(d2, axis=-1).astype(jnp.int32),
+        jnp.maximum(jnp.min(d2, axis=-1), 0.0),
+    )
+
+
+def kmeans_assign(
+    x: jax.Array, centroids: jax.Array, *, impl: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """(labels int32 (N,), squared distance to nearest centroid (N,))."""
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _kmeans_assign_xla(x, centroids)
+    block_n = 1024 if x.shape[0] >= 1024 else 128
+    xp, n = _pad_rows(x, block_n)
+    labels, dists = _kmeans_kernel.kmeans_assign_pallas(
+        xp, centroids, block_n=block_n, interpret=not _on_tpu()
+    )
+    return labels[:n], dists[:n]
+
+
+# --------------------------------------------------------------------------
+# flash attention (forward) — serving/prefill deployment path
+# --------------------------------------------------------------------------
+
+def flash_attention(
+    q: jax.Array,          # (B, S, H, hd)
+    k: jax.Array,          # (B, T, H, hd)  (KV pre-repeated to H heads)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Online-softmax attention; scores never materialize in HBM."""
+    from repro.kernels import flash_attention as _fa, ref as _ref
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, x.shape[1], hd)
+    unfold = lambda x: x.reshape(b, h, s, hd).transpose(0, 2, 1, 3)
+    impl = _resolve(impl)
+    if impl == "xla":
+        return unfold(_ref.flash_attention_ref(
+            fold(q), fold(k), fold(v), causal=causal, window=window))
+    bq = _largest_divisor(s, 256)
+    bkv = _largest_divisor(t, 256)
+    return unfold(_fa.flash_attention_pallas(
+        fold(q), fold(k), fold(v), causal=causal, window=window,
+        block_q=bq, block_kv=bkv, interpret=not _on_tpu()))

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for hashed Random Binning feature generation (Alg. 1).
+
+This is the paper's graph-construction hot spot: O(N·R·d) work to map every
+point into one bin per random grid. The TPU adaptation (DESIGN.md §3.1) makes
+the feature space static via multiply-shift hashing, so the kernel is pure
+VPU element-wise math over VMEM tiles — no hash-map, no dynamic shapes.
+
+Tiling: grid (N/block_n, R/block_r). Each program loads an x tile
+(block_n, d), the (block_r, d) slice of grid parameters, and writes a
+(block_n, block_r) tile of int32 feature indices. VMEM per program ≈
+block_n·d·4 + 3·block_r·d·4 + block_n·block_r·4 bytes — sized well under the
+~16 MiB v5e VMEM budget for the default blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import HASH_MIX
+
+
+def _rb_binning_kernel(
+    x_ref,        # (block_n, d) float32
+    w_ref,        # (block_r, d) float32
+    b_ref,        # (block_r, d) float32
+    a_ref,        # (block_r, d) uint32
+    c_ref,        # (block_r, 1) uint32
+    out_ref,      # (block_n, block_r) int32
+    *,
+    d_g: int,
+    block_r: int,
+):
+    shift = 32 - int(d_g).bit_length() + 1
+    x = x_ref[...]                                     # (bn, d)
+    w = w_ref[...]                                     # (br, d)
+    b = b_ref[...]
+    a = a_ref[...]
+    c = c_ref[...][:, 0]                               # (br,)
+    # (bn, br, d) bin coordinates
+    bins = jnp.floor((x[:, None, :] - b[None, :, :]) / w[None, :, :])
+    bins_u = bins.astype(jnp.int32).astype(jnp.uint32)
+    h = jnp.sum(bins_u * a[None, :, :], axis=-1, dtype=jnp.uint32)
+    h = (h + c[None, :]) * HASH_MIX
+    local = (h >> jnp.uint32(shift)).astype(jnp.int32)  # (bn, br) in [0, d_g)
+    g0 = pl.program_id(1) * block_r
+    offs = (g0 + jax.lax.iota(jnp.int32, block_r)) * d_g
+    out_ref[...] = local + offs[None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d_g", "block_n", "block_r", "interpret")
+)
+def rb_binning_pallas(
+    x: jax.Array,
+    widths: jax.Array,
+    biases: jax.Array,
+    hash_a: jax.Array,
+    hash_c: jax.Array,
+    *,
+    d_g: int,
+    block_n: int = 256,
+    block_r: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas entry point; caller (ops.py) guarantees divisible tilings."""
+    n, d = x.shape
+    r = widths.shape[0]
+    assert n % block_n == 0 and r % block_r == 0, (n, r, block_n, block_r)
+    grid = (n // block_n, r // block_r)
+    kern = functools.partial(_rb_binning_kernel, d_g=d_g, block_r=block_r)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, g: (i, 0)),
+            pl.BlockSpec((block_r, d), lambda i, g: (g, 0)),
+            pl.BlockSpec((block_r, d), lambda i, g: (g, 0)),
+            pl.BlockSpec((block_r, d), lambda i, g: (g, 0)),
+            pl.BlockSpec((block_r, 1), lambda i, g: (g, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_r), lambda i, g: (i, g)),
+        out_shape=jax.ShapeDtypeStruct((n, r), jnp.int32),
+        interpret=interpret,
+    )(x, widths, biases, hash_a, hash_c[:, None])

@@ -1,0 +1,181 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape) cell on the
+production meshes and record memory/cost/collective evidence.
+
+The two lines above MUST stay first: jax locks the device count at first
+initialization, and the dry-run needs 512 placeholder host devices to build
+the 2×16×16 production mesh. Never set that flag globally — smoke tests and
+benchmarks must see one device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all [--multi-pod] [--out-dir dryrun_results]
+
+``--all`` re-execs one subprocess per cell (crash isolation + resumability:
+existing result JSONs are skipped).
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every shape literal in an HLO result type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-op-kind byte totals from the (post-SPMD, per-device) HLO text."""
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", stripped)
+        if not m:
+            continue
+        result_type, opname = m.groups()
+        for kind in COLLECTIVE_OPS:
+            if opname == kind or opname.startswith(kind + "-"):
+                # result type covers output bytes (per device)
+                out[kind]["count"] += 1
+                out[kind]["bytes"] += _shape_bytes(result_type)
+                break
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_path: str) -> dict:
+    import jax
+    from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.specs import build_cell
+    from repro.utils import tree_bytes
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "n_devices": 512 if multi_pod else 256}
+    skip = shape_applicable(cfg, shape)
+    if skip is not None:
+        record["status"] = "skipped"
+        record["skip_reason"] = skip
+        _write(out_path, record)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step, args, shardings = build_cell(cfg, shape, mesh)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=shardings).lower(*args)
+    record["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    record["memory"] = {
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "peak_bytes_per_device": int(
+            getattr(mem, "argument_size_in_bytes", 0)
+            + getattr(mem, "temp_size_in_bytes", 0)),
+    }
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    record["cost"] = {
+        "flops": float(cost.get("flops", -1.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0)),
+    }
+    record["collectives"] = parse_collectives(compiled.as_text())
+    record["params"] = cfg.param_count()
+    record["active_params"] = cfg.active_param_count()
+    record["tokens"] = (shape.global_batch if shape.kind == "decode"
+                        else shape.tokens)
+    record["kind"] = shape.kind
+    record["status"] = "ok"
+    # memory_analysis proves it fits; cost_analysis feeds §Roofline
+    print(f"[{arch} × {shape_name} × {mesh_name}] "
+          f"compile {record['compile_s']}s, "
+          f"peak/device {record['memory']['peak_bytes_per_device']/2**30:.2f} GiB, "
+          f"flops {record['cost']['flops']:.3e}")
+    _write(out_path, record)
+    return record
+
+
+def _write(path: str, record: dict) -> None:
+    if path:
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="dryrun_results")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCH_IDS, SHAPES
+        failures = []
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                mesh_tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+                out = os.path.join(args.out_dir, f"{arch}__{shape}__{mesh_tag}.json")
+                if os.path.exists(out):
+                    print(f"skip existing {out}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape,
+                       "--out-dir", args.out_dir]
+                if args.multi_pod:
+                    cmd.append("--multi-pod")
+                print(">>", " ".join(cmd), flush=True)
+                r = subprocess.run(cmd, timeout=args.timeout)
+                if r.returncode != 0:
+                    failures.append((arch, shape))
+                    print(f"!! FAILED {arch} × {shape}", flush=True)
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("all cells OK")
+        return
+
+    mesh_tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+    out = os.path.join(args.out_dir, f"{args.arch}__{args.shape}__{mesh_tag}.json")
+    run_cell(args.arch, args.shape, args.multi_pod, out)
+
+
+if __name__ == "__main__":
+    main()

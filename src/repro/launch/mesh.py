@@ -1,0 +1,32 @@
+"""Production mesh definitions.
+
+A function (never a module-level constant) so importing this module never
+touches jax device state — callers control when devices materialize.
+
+Axes:
+  - single-pod: (data=16, model=16)          — 256 chips (one v5e pod)
+  - multi-pod:  (pod=2, data=16, model=16)   — 512 chips (2 pods)
+
+``pod`` composes with ``data`` in every FSDP/batch PartitionSpec
+(``('pod','data')``), so scaling to N pods is a mesh-shape change only; the
+only inter-pod collective in training is the DP gradient reduction, matching
+the slow-link hierarchy.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist locally, as a 1-D data mesh (tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))

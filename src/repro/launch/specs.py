@@ -1,0 +1,112 @@
+"""ShapeDtypeStruct stand-ins + sharded step builders for the dry-run.
+
+``input_specs(cfg, shape)`` returns the batch stand-ins (no allocation);
+``build_cell`` assembles (step_fn, arg_specs, in_shardings) for a given
+(arch × input-shape × mesh) cell — train lowers ``train_step``, decode
+shapes lower ``serve_step`` (one token against a seq_len cache), prefill
+lowers ``prefill_step``, exactly as the assignment prescribes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ShapeSpec
+from repro.models import sharding as sh
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serve.engine import make_serve_step
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.trainer import TrainConfig, make_train_step
+
+
+def _sds(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch stand-ins for one step at this input shape."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.input_mode == "tokens":
+            return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        return {"token": jax.ShapeDtypeStruct((b, cfg.d_model), jnp.float32)}
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.mrope_sections is not None:
+        batch["positions"] = jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return batch
+
+
+def params_and_specs(cfg: ModelConfig, mesh: Mesh):
+    pshape = jax.eval_shape(
+        functools.partial(T.init_params, cfg), jax.random.PRNGKey(0))
+    pspecs = sh.param_specs(cfg, mesh, pshape)
+    return pshape, pspecs
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+               ) -> Tuple[Any, Tuple, Tuple]:
+    """(step_fn, arg ShapeDtypeStructs, in_shardings) for one dry-run cell."""
+    import dataclasses
+    import math
+    mesh_size = math.prod(mesh.shape.values())
+    if cfg.dp_over_tp and shape.global_batch % mesh_size != 0:
+        # pure-DP only pays when every chip owns whole sequences; smaller
+        # batches fall back to the TP/SP layout (EXPERIMENTS.md §Perf #7)
+        cfg = dataclasses.replace(cfg, dp_over_tp=False)
+    ns = lambda spec: NamedSharding(mesh, spec)
+    pshape, pspecs = params_and_specs(cfg, mesh)
+    pshard = jax.tree_util.tree_map(ns, pspecs,
+                                    is_leaf=lambda x: isinstance(x, P))
+    batch = input_specs(cfg, shape)
+    bspecs = sh.batch_specs(cfg, mesh, batch_size=shape.global_batch)
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(opt=OptConfig())
+        step = make_train_step(cfg, tcfg)
+        oshape = jax.eval_shape(
+            functools.partial(init_opt_state, cfg=tcfg.opt), pshape)
+        oshard = type(oshape)(
+            ns(P()),
+            jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, P)),
+            jax.tree_util.tree_map(ns, pspecs, is_leaf=lambda x: isinstance(x, P)),
+            None,
+        )
+        bshard = {k: ns(bspecs[k]) for k in batch}
+        return step, (pshape, oshape, batch), (pshard, oshard, bshard)
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch, caches):
+            return T.prefill(cfg, params, batch, caches)
+        cshape = jax.eval_shape(
+            lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+        cspecs = sh.cache_specs(cfg, mesh, cshape)
+        cshard = jax.tree_util.tree_map(ns, cspecs,
+                                        is_leaf=lambda x: isinstance(x, P))
+        bshard = {k: ns(bspecs[k]) for k in batch}
+        return prefill_step, (pshape, batch, cshape), (pshard, bshard, cshard)
+
+    # decode: one new token against a seq_len-deep cache
+    serve = make_serve_step(cfg)
+    cshape = jax.eval_shape(
+        lambda: T.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cspecs = sh.cache_specs(cfg, mesh, cshape)
+    cshard = jax.tree_util.tree_map(ns, cspecs,
+                                    is_leaf=lambda x: isinstance(x, P))
+    tok = input_specs(cfg, shape)["token"]
+    dp = sh.pick_axes(mesh, tok.shape[0], ("pod", "data")) or ()
+    tok_spec = P(dp) if tok.ndim == 1 else P(dp, None)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (serve, (pshape, tok, cshape, pos),
+            (pshard, ns(tok_spec), cshard, ns(P())))

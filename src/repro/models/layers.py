@@ -1,0 +1,638 @@
+"""Layer zoo: norms, RoPE/M-RoPE, GQA/MLA attention (chunked, cached),
+SwiGLU MLP, sort-based MoE, Mamba2 SSD, and the Hymba hybrid mixer.
+
+Conventions:
+  - params are nested dicts of fp32 leaves; ``cast`` converts to the compute
+    dtype at the forward boundary (the trainer keeps fp32 masters).
+  - projections are stored flat (D, H·hd) so sharded dims stay divisible even
+    when head counts aren't multiples of the mesh axis (DESIGN.md §5).
+  - attention is q-chunked with fp32 softmax: peak activation is
+    O(B·H·chunk·T), never O(B·H·S·T).
+  - KV caches are flat (B, T, Hkv·hd); SSM caches are (state, conv) tuples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoEConfig, SSMConfig, Segment
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+DP_AXES = ("pod", "data")   # batch/FSDP axes
+TP_AXIS = "model"
+
+
+def _ctx_mesh():
+    """The mesh installed by a ``with mesh:`` block, if any (else None)."""
+    try:
+        from jax._src import mesh as _mesh_lib
+        m = _mesh_lib.thread_resources.env.physical_mesh
+        if m is not None and not m.empty:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def shard_hint(x: jax.Array, *spec: Any) -> jax.Array:
+    """with_sharding_constraint with axes filtered to the context mesh.
+
+    No-op outside a mesh context (single-device tests). Axis groups like
+    ('pod','data') degrade to whatever subset exists in the mesh, so the same
+    model code runs on (data, model) and (pod, data, model). Uneven dims are
+    fine here — GSPMD pads intermediates.
+    """
+    m = _ctx_mesh()
+    if m is None:
+        return x
+    cleaned = []
+    for el in spec:
+        if el is None:
+            cleaned.append(None)
+            continue
+        group = el if isinstance(el, tuple) else (el,)
+        axes = tuple(a for a in group if a in m.shape)
+        cleaned.append(axes[0] if len(axes) == 1 else (axes or None))
+    from jax.sharding import NamedSharding, PartitionSpec
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(m, PartitionSpec(*cleaned)))
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+def _init(key, shape, scale=0.02):
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def swiglu(x: jax.Array, wg, wu, wd) -> jax.Array:
+    h = jax.nn.silu(x @ wg) * (x @ wu)
+    return h @ wd
+
+
+# ---------------------------------------------------------------------------
+# RoPE (+ partial rotary, + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_tables(
+    positions: jax.Array,            # (B, S) int32 or (3, B, S) for M-RoPE
+    rotary_dim: int,
+    theta: float,
+    mrope_sections: Optional[Tuple[int, int, int]] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables (B, S, rotary_dim/2), fp32."""
+    half = rotary_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 2:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+        return jnp.cos(ang), jnp.sin(ang)
+    # M-RoPE: three position streams own disjoint frequency sections
+    assert mrope_sections is not None and sum(mrope_sections) == half
+    ang3 = positions[..., None].astype(jnp.float32) * freqs      # (3,B,S,half)
+    parts = []
+    start = 0
+    for i, sec in enumerate(mrope_sections):
+        parts.append(ang3[i, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                        # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate the first 2·half dims of x (B, S, H, hd); rest pass through."""
+    half = cos.shape[-1]
+    dt = x.dtype
+    x1 = x[..., :half].astype(jnp.float32)
+    x2 = x[..., half:2 * half].astype(jnp.float32)
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    rot = jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return jnp.concatenate([rot.astype(dt), x[..., 2 * half:]], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# core attention (q-chunked, causal, optional sliding window, GQA grouping)
+# ---------------------------------------------------------------------------
+
+def causal_attention(
+    q: jax.Array,                    # (B, S, H, hd)
+    k: jax.Array,                    # (B, T, Hkv, hd)
+    v: jax.Array,                    # (B, T, Hkv, hd)
+    *,
+    q_offset: jax.Array | int = 0,   # position of q[0] in the kv timeline
+    window: Optional[int] = None,
+    chunk: int = 512,
+    kv_len: Optional[jax.Array] = None,  # valid kv prefix (decode with cache)
+) -> jax.Array:
+    b, s, h, hd = q.shape
+    t, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    cached = t != s   # decode/cache path: kv is the (large) cache
+    if not cached:
+        # GQA comm order matters (train/prefill): gather the SMALL
+        # pre-repeat KV over sequence (head-replicated — Hkv·hd bytes), then
+        # repeat + head-slice locally. Hinting after the repeat all-gathered
+        # rep× more bytes and triggered SPMD involuntary full
+        # rematerialization (EXPERIMENTS.md §Perf).
+        if rep > 1:
+            k = shard_hint(k, DP_AXES, None, None, None)
+            v = shard_hint(v, DP_AXES, None, None, None)
+            k = jnp.repeat(k, rep, axis=2)  # local: head dim is replicated
+            v = jnp.repeat(v, rep, axis=2)
+        k = shard_hint(k, DP_AXES, None, TP_AXIS, None)   # local slice
+        v = shard_hint(v, DP_AXES, None, TP_AXIS, None)
+        q = shard_hint(q, DP_AXES, None, TP_AXIS, None)
+
+    def attend(qc: jax.Array, qpos: jax.Array) -> jax.Array:
+        # qc: (B, C, H, hd); qpos: (C,)
+        if cached:
+            # grouped GQA against the untouched cache layout — never
+            # repeats or re-shards the (B, T, Hkv, hd) cache
+            c = qc.shape[1]
+            qg = qc.reshape(b, c, hkv, rep, hd)
+            scores = jnp.einsum(
+                "bcgrd,btgd->bgrct", qg, k,
+                preferred_element_type=jnp.float32) * scale
+            scores = scores.reshape(b, h, c, t)
+        else:
+            scores = jnp.einsum(
+                "bchd,bthd->bhct", qc, k,
+                preferred_element_type=jnp.float32) * scale
+        allow = kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            allow &= kpos[None, :] > qpos[:, None] - window
+        if kv_len is not None:
+            allow &= kpos[None, :] < kv_len
+        scores = jnp.where(allow[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        if cached:
+            pg = probs.reshape(b, hkv, rep, -1, t)
+            out = jnp.einsum(
+                "bgrct,btgd->bcgrd", pg, v,
+                preferred_element_type=jnp.float32)
+            out = out.reshape(b, -1, h, hd)
+        else:
+            out = jnp.einsum(
+                "bhct,bthd->bchd", probs, v,
+                preferred_element_type=jnp.float32)
+        return out.astype(q.dtype)
+
+    # remat: probs are recomputed in backward — peak stays O(one chunk)
+    attend = jax.checkpoint(attend)
+
+    if s <= chunk:
+        qpos = q_offset + jnp.arange(s, dtype=jnp.int32)
+        return attend(q, qpos)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    q_chunks = q.reshape(b, nc, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    pos = (q_offset + jnp.arange(s, dtype=jnp.int32)).reshape(nc, chunk)
+
+    def body(_, inp):
+        qc, qpos = inp
+        return None, attend(qc, qpos)
+
+    _, outs = jax.lax.scan(body, None, (q_chunks, pos))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_gqa(cfg: ModelConfig, key) -> Params:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, h * hd)),
+        "wk": _init(ks[1], (d, hkv * hd)),
+        "wv": _init(ks[2], (d, hkv * hd)),
+        "wo": _init(ks[3], (h * hd, d), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def apply_gqa(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                    # (B, S, D)
+    cos: jax.Array, sin: jax.Array,  # rope tables for these S positions
+    *,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,  # {"k","v"} flat (B, T, Hkv·hd)
+    pos: Optional[jax.Array] = None, # scalar int32: write offset into cache
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    if cache is not None:
+        kf = k.reshape(b, s, hkv * hd)
+        vf = v.reshape(b, s, hkv * hd)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kf, (0, pos, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vf, (0, pos, 0))
+        new_cache = {"k": ck, "v": cv}
+        t = ck.shape[1]
+        out = causal_attention(
+            q, ck.reshape(b, t, hkv, hd), cv.reshape(b, t, hkv, hd),
+            q_offset=pos, window=window, chunk=cfg.attn_chunk,
+            kv_len=pos + s)
+    else:
+        out = causal_attention(q, k, v, q_offset=0, window=window,
+                               chunk=cfg.attn_chunk)
+    return out.reshape(b, s, h * hd) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA attention block (DeepSeek-V2): low-rank compressed KV cache
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg: ModelConfig, key) -> Params:
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": _init(ks[0], (d, h * (m.qk_nope_dim + m.qk_rope_dim))),
+        "w_dkv": _init(ks[1], (d, m.kv_lora_rank + m.qk_rope_dim)),
+        "kv_ln": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "w_uk": _init(ks[2], (m.kv_lora_rank, h * m.qk_nope_dim)),
+        "w_uv": _init(ks[3], (m.kv_lora_rank, h * m.v_dim)),
+        "wo": _init(ks[4], (h * m.v_dim, d),
+                    scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def apply_mla(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cos: jax.Array, sin: jax.Array,
+    *,
+    window: Optional[int] = None,
+    cache: Optional[Params] = None,  # {"ckv": (B,T,lora), "kr": (B,T,rope)}
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    b, s, d = x.shape
+    h = cfg.n_heads
+    m = cfg.mla
+    dn, dr, dv, lo = m.qk_nope_dim, m.qk_rope_dim, m.v_dim, m.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    q = (x @ p["wq"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    dkv = x @ p["w_dkv"]                                  # (B,S,lo+dr)
+    ckv = rmsnorm(dkv[..., :lo], p["kv_ln"], cfg.norm_eps)
+    kr = apply_rope(dkv[..., lo:][:, :, None, :], cos, sin)[:, :, 0]  # (B,S,dr)
+
+    # Absorbed scoring: q_nope projected into the latent space once, so the
+    # cache stays compressed (the MLA memory win).
+    wk = p["w_uk"].reshape(lo, h, dn)
+    q_lat = jnp.einsum("bshn,lhn->bshl", q_nope, wk,
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+
+    new_cache = None
+    if cache is not None:
+        ckv_t = jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, pos, 0))
+        kr_t = jax.lax.dynamic_update_slice(cache["kr"], kr, (0, pos, 0))
+        new_cache = {"ckv": ckv_t, "kr": kr_t}
+        ckv_all, kr_all, q_off, kv_len = ckv_t, kr_t, pos, pos + s
+    else:
+        ckv_all, kr_all, q_off, kv_len = ckv, kr, 0, None
+
+    t = ckv_all.shape[1]
+    kpos = jnp.arange(t, dtype=jnp.int32)
+    qpos = q_off + jnp.arange(s, dtype=jnp.int32)
+
+    def attend(q_lat_c, q_rope_c, qpos_c):
+        sc = jnp.einsum("bshl,btl->bhst", q_lat_c, ckv_all,
+                        preferred_element_type=jnp.float32)
+        sc += jnp.einsum("bshr,btr->bhst", q_rope_c.astype(jnp.float32),
+                         kr_all.astype(jnp.float32))
+        sc *= scale
+        allow = kpos[None, :] <= qpos_c[:, None]
+        if window is not None:
+            allow &= kpos[None, :] > qpos_c[:, None] - window
+        if kv_len is not None:
+            allow &= kpos[None, :] < kv_len
+        sc = jnp.where(allow[None, None], sc, NEG_INF)
+        pr = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        o_lat = jnp.einsum("bhst,btl->bshl", pr, ckv_all,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        return o_lat
+
+    attend = jax.checkpoint(attend)
+    chunk = cfg.attn_chunk
+    if s <= chunk:
+        o_lat = attend(q_lat, q_rope, qpos)
+    else:
+        nc = s // chunk
+        ql = q_lat.reshape(b, nc, chunk, h, lo).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(b, nc, chunk, h, dr).transpose(1, 0, 2, 3, 4)
+        pc = qpos.reshape(nc, chunk)
+        _, outs = jax.lax.scan(
+            lambda _, inp: (None, attend(*inp)), None, (ql, qr, pc))
+        o_lat = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, lo)
+
+    wv = p["w_uv"].reshape(lo, h, dv)
+    out = jnp.einsum("bshl,lhv->bshv", o_lat, wv,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out.reshape(b, s, h * dv) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Params:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wg": _init(ks[0], (d, f)),
+        "wu": _init(ks[1], (d, f)),
+        "wd": _init(ks[2], (f, d), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return swiglu(x, p["wg"], p["wu"], p["wd"])
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    mo = cfg.moe
+    ks = jax.random.split(key, 5)
+    e, fe = mo.n_routed, mo.d_expert
+    return {
+        "router": _init(ks[0], (d, e), scale=0.006),
+        "experts": {
+            "wg": _init(ks[1], (e, d, fe)),
+            "wu": _init(ks[2], (e, d, fe)),
+            "wd": _init(ks[3], (e, fe, d),
+                        scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+        },
+        "shared": init_mlp(cfg, ks[4], d_ff=mo.n_shared * fe),
+    }
+
+
+def apply_moe(
+    cfg: ModelConfig, p: Params, x: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Group-local sort-based MoE dispatch (TPU-static shapes).
+
+    Tokens are grouped by the batch dimension (already DP-sharded), and ALL
+    index math — sort, cumsum, scatter/gather — happens per group via vmap,
+    so nothing ever sorts or scatters across shards (the GShard/MaxText
+    grouping trick; a global sort forced GSPMD to replicate 100+ GiB of
+    dispatch state before this). Experts dim shards over TP (=EP).
+
+    Returns (output (B,S,D), aux load-balance loss scalar).
+    """
+    mo = cfg.moe
+    b, s, d = x.shape
+    e, k = mo.n_routed, mo.top_k
+    cap = max(int(math.ceil(s * k * mo.capacity_factor / e)), 1)
+
+    xg = shard_hint(x, DP_AXES, None, None)                  # (G=B, S, D)
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (G, S, E)
+    gates, eidx = jax.lax.top_k(probs, k)                    # (G, S, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    def dispatch_group(xg_, eidx_, gates_):
+        # xg_: (S, D); eidx_/gates_: (S, k) — entirely shard-local
+        e_flat = eidx_.reshape(-1)                           # (S·k,)
+        g_flat = gates_.reshape(-1)
+        tok_flat = jnp.repeat(jnp.arange(s, dtype=jnp.int32), k)
+        order = jnp.argsort(e_flat, stable=True)
+        e_s, g_s, tok_s = e_flat[order], g_flat[order], tok_flat[order]
+        counts = jax.ops.segment_sum(
+            jnp.ones_like(e_s, jnp.float32), e_s, num_segments=e)
+        offsets = jnp.cumsum(counts) - counts
+        rank = (jnp.arange(s * k, dtype=jnp.int32)
+                - offsets[e_s].astype(jnp.int32))
+        keep = rank < cap
+        dest = e_s * cap + jnp.clip(rank, 0, cap - 1)
+        xs = xg_[tok_s] * keep[:, None].astype(xg_.dtype)
+        buf = jnp.zeros((e * cap, d), xg_.dtype).at[dest].add(xs)
+        return buf.reshape(e, cap, d), (dest, tok_s, g_s, keep, counts)
+
+    eb, (dest, tok_s, g_s, keep, counts) = jax.vmap(dispatch_group)(
+        xg, eidx, gates)                                     # eb: (G, E, C, D)
+    eb = shard_hint(eb, DP_AXES, TP_AXIS, None, None)
+    we = p["experts"]
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", eb, we["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("gecd,edf->gecf", eb, we["wu"].astype(x.dtype))
+    y = jnp.einsum("gecf,efd->gecd", h, we["wd"].astype(x.dtype))
+    y = shard_hint(y, DP_AXES, TP_AXIS, None, None)
+
+    def combine_group(y_, dest_, tok_s_, g_s_, keep_):
+        y_flat = y_.reshape(e * cap, d)
+        contrib = y_flat[dest_] * (g_s_ * keep_).astype(y_.dtype)[:, None]
+        return jnp.zeros((s, d), y_.dtype).at[tok_s_].add(contrib)
+
+    out = jax.vmap(combine_group)(y, dest, tok_s, g_s, keep)  # (G, S, D)
+    out = out + apply_mlp(p["shared"], xg)
+
+    # Switch-style load-balance aux: E · Σ_e f_e p̄_e (global means)
+    frac = counts.sum(0) / jnp.maximum(b * s * k, 1)
+    pbar = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(frac * pbar) * mo.router_aux_weight
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD mixer
+# ---------------------------------------------------------------------------
+
+def init_ssm(cfg: ModelConfig, key) -> Params:
+    d = cfg.d_model
+    s = cfg.ssm
+    di, nh, cc = s.d_inner(d), s.n_heads(d), s.conv_channels(d)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": _init(ks[0], (d, 2 * di + 2 * s.n_groups * s.d_state + nh)),
+        "conv_w": _init(ks[1], (s.conv_kernel, cc), scale=0.2),
+        "conv_b": jnp.zeros((cc,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "out_ln": jnp.ones((di,), jnp.float32),
+        "w_out": _init(ks[3], (di, d), scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _causal_conv(xc: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Depthwise causal conv1d via shifted adds. xc (B,S,C), w (K,C)."""
+    kk = w.shape[0]
+    if state is None:
+        pad = jnp.zeros_like(xc[:, : kk - 1])
+        full = jnp.concatenate([pad, xc], axis=1)
+        new_state = None
+    else:
+        full = jnp.concatenate([state.astype(xc.dtype), xc], axis=1)
+        new_state = full[:, -(kk - 1):]
+    s_len = xc.shape[1]
+    out = jnp.zeros_like(xc)
+    for i in range(kk):
+        out = out + full[:, i : i + s_len] * w[i].astype(xc.dtype)
+    return out + b.astype(xc.dtype), new_state
+
+
+def apply_ssm(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,                      # (B, S, D)
+    *,
+    cache: Optional[Params] = None,    # {"state": (B,H,N,P), "conv": (B,K-1,C)}
+) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba2 SSD: chunked state-space duality scan (DESIGN/Mamba2 §6)."""
+    sc = cfg.ssm
+    b, s, d = x.shape
+    di, nh, n = sc.d_inner(d), sc.n_heads(d), sc.d_state
+    pdim, g = sc.head_dim, sc.n_groups
+
+    proj = x @ p["w_in"]
+    z, xc, bmat, cmat, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+
+    conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xc = conv_out[..., :di].reshape(b, s, nh, pdim)
+    bmat = conv_out[..., di:di + g * n].reshape(b, s, g, n)
+    cmat = conv_out[..., di + g * n:].reshape(b, s, g, n)
+    # groups broadcast over heads (g == 1 everywhere in our configs)
+    bmat = bmat[:, :, 0]
+    cmat = cmat[:, :, 0]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # (B,S,H)
+    a = -jnp.exp(p["a_log"])                                       # (H,)
+    da = dt * a                                                    # (B,S,H) ≤ 0
+    xdt = xc.astype(jnp.float32) * dt[..., None]                   # (B,S,H,P)
+
+    state0 = (cache["state"].astype(jnp.float32) if cache is not None
+              else jnp.zeros((b, nh, n, pdim), jnp.float32))
+
+    q = min(sc.chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    def chunk_body(state, inp):
+        da_c, xdt_c, b_c, c_c = inp          # (B,Q,H), (B,Q,H,P), (B,Q,N)x2
+        cum = jnp.cumsum(da_c, axis=1)                        # (B,Q,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]         # (B,Qi,Qj,H)
+        tri = jnp.tril(jnp.ones((q, q), bool))
+        lmat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", c_c.astype(jnp.float32),
+                        b_c.astype(jnp.float32))              # (B,Qi,Qj)
+        m = cb[..., None] * lmat                              # (B,Qi,Qj,H)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", m, xdt_c)
+        decay_out = jnp.exp(cum)                              # (B,Q,H)
+        y_inter = jnp.einsum("bin,bhnp->bihp", c_c.astype(jnp.float32),
+                             state) * decay_out[..., None]
+        decay_in = jnp.exp(cum[:, -1:, :] - cum)              # (B,Q,H)
+        contrib = jnp.einsum("bjn,bjhp->bhnp", b_c.astype(jnp.float32),
+                             xdt_c * decay_in[..., None])
+        state_new = jnp.exp(cum[:, -1])[:, :, None, None] * state + contrib
+        return state_new, y_intra + y_inter
+
+    resh = lambda a_: a_.reshape((b, nc, q) + a_.shape[2:]).swapaxes(0, 1)
+    state_f, ys = jax.lax.scan(
+        jax.checkpoint(chunk_body), state0,
+        (resh(da), resh(xdt), resh(bmat), resh(cmat)))
+    y = ys.swapaxes(0, 1).reshape(b, s, nh, pdim)
+    y = y + xc.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    gated = y * jax.nn.silu(z)
+    out = rmsnorm(gated, p["out_ln"], cfg.norm_eps) @ p["w_out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": state_f.astype(cache["state"].dtype),
+                     "conv": new_conv.astype(cache["conv"].dtype)}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Hymba hybrid mixer: attention ∥ SSM on the same normed input
+# ---------------------------------------------------------------------------
+
+def init_hybrid(cfg: ModelConfig, key) -> Params:
+    ka, ks, kn = jax.random.split(key, 3)
+    return {
+        "attn": init_gqa(cfg, ka),
+        "ssm": init_ssm(cfg, ks),
+        "attn_out_ln": jnp.ones((cfg.d_model,), jnp.float32),
+        "ssm_out_ln": jnp.ones((cfg.d_model,), jnp.float32),
+    }
+
+
+def apply_hybrid(
+    cfg: ModelConfig,
+    p: Params,
+    x: jax.Array,
+    cos: jax.Array, sin: jax.Array,
+    *,
+    window: Optional[int],
+    cache: Optional[Params] = None,   # {"k","v","state","conv"}
+    pos: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Optional[Params]]:
+    attn_cache = None if cache is None else {"k": cache["k"], "v": cache["v"]}
+    ssm_cache = None if cache is None else {"state": cache["state"],
+                                            "conv": cache["conv"]}
+    a_out, a_cache = apply_gqa(cfg, p["attn"], x, cos, sin, window=window,
+                               cache=attn_cache, pos=pos)
+    s_out, s_cache = apply_ssm(cfg, p["ssm"], x, cache=ssm_cache)
+    # Hymba: per-branch output normalization, then mean fusion
+    out = 0.5 * (rmsnorm(a_out, p["attn_out_ln"], cfg.norm_eps)
+                 + rmsnorm(s_out, p["ssm_out_ln"], cfg.norm_eps))
+    new_cache = None
+    if cache is not None:
+        new_cache = {**a_cache, **s_cache}
+    return out, new_cache

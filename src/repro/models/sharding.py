@@ -1,0 +1,158 @@
+"""Sharding rules: 2-D FSDP×TP parameter layout + batch/cache shardings.
+
+Axes: ``pod`` (inter-pod DP), ``data`` (intra-pod DP/FSDP), ``model`` (TP/EP).
+FSDP groups (pod, data); TP is model. Rules are *divisibility-aware*: a
+preferred axis tuple degrades gracefully (drops axes right-to-left, then
+tries the next preference) whenever a dim isn't divisible — this is what lets
+awkward head counts (hymba 25H/5KV, mamba2 vocab 50280) run unmodified on a
+16-way model axis (DESIGN.md §5). jit *inputs* must divide exactly;
+intermediates may be uneven (GSPMD pads), so params/caches are stored with
+flat head×dim columns.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+FSDP: Tuple[str, ...] = ("pod", "data")
+TP: Tuple[str, ...] = ("model",)
+
+
+def _present(mesh: Mesh, names: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(n for n in names if n in mesh.shape)
+
+
+def _size(mesh: Mesh, names: Sequence[str]) -> int:
+    return math.prod(mesh.shape[n] for n in names) if names else 1
+
+
+def pick_axes(mesh: Mesh, dim: int, *prefs: Sequence[str]) -> Optional[Tuple[str, ...]]:
+    """Largest evenly-dividing prefix of the first workable preference."""
+    for pref in prefs:
+        axes = _present(mesh, pref)
+        while axes:
+            if dim % _size(mesh, axes) == 0:
+                return axes
+            axes = axes[:-1]
+    return None
+
+
+def _spec(mesh: Mesh, dims: Sequence[Optional[Tuple[str, ...]]]) -> P:
+    cleaned = [None if (a is None or len(a) == 0) else
+               (a[0] if len(a) == 1 else a) for a in dims]
+    return P(*cleaned)
+
+
+def _rule_for_leaf(mesh: Mesh, path: Tuple[str, ...], shape: Tuple[int, ...]) -> P:
+    """Partition rule from the param path (without the stacked layer dim)."""
+    name = path[-1]
+    nd = len(shape)
+    if nd == 1:
+        # norm scales, biases, per-head scalars: shard big 1-D over TP
+        if shape[0] >= 1024:
+            return _spec(mesh, [pick_axes(mesh, shape[0], TP)])
+        return P()
+    if name == "embed":                      # (V, D)
+        return _spec(mesh, [pick_axes(mesh, shape[0], TP),
+                            pick_axes(mesh, shape[1], FSDP)])
+    if name == "head":                       # (D, V)
+        return _spec(mesh, [pick_axes(mesh, shape[0], FSDP),
+                            pick_axes(mesh, shape[1], TP)])
+    if name == "router":                     # (D, E): replicate experts dim
+        return _spec(mesh, [pick_axes(mesh, shape[0], FSDP), None])
+    if name == "conv_w":                     # (K, C)
+        return _spec(mesh, [None, pick_axes(mesh, shape[1], TP)])
+    if nd == 3:                              # MoE expert stacks (E, D, F) / (E, F, D)
+        if name in ("wg", "wu"):
+            return _spec(mesh, [pick_axes(mesh, shape[0], TP),
+                                pick_axes(mesh, shape[1], FSDP), None])
+        if name == "wd":
+            return _spec(mesh, [pick_axes(mesh, shape[0], TP), None,
+                                pick_axes(mesh, shape[2], FSDP)])
+    # 2-D projections: "into heads/ffn" shard col on TP; "back to D" shard row
+    if name in ("wo", "wd", "w_out", "w_uk", "w_uv"):
+        return _spec(mesh, [pick_axes(mesh, shape[0], TP),
+                            pick_axes(mesh, shape[1], FSDP)])
+    # wq, wk, wv, wg, wu, w_in, w_dkv, generic
+    return _spec(mesh, [pick_axes(mesh, shape[0], FSDP),
+                        pick_axes(mesh, shape[1], TP)])
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any) -> Any:
+    """PartitionSpec pytree mirroring ``params_shape`` (an eval_shape tree)."""
+    fsdp = FSDP + TP if cfg.dp_over_tp else FSDP
+
+    def rule(key_path, leaf):
+        path = tuple(
+            k.key if hasattr(k, "key") else str(k) for k in key_path)
+        shape = tuple(leaf.shape)
+        if cfg.dp_over_tp:
+            # pure-DP policy: shard the largest dim over the whole mesh
+            inner_shape = shape[1:] if path and path[0] == "segments" else shape
+            dims: list = [None] * len(inner_shape)
+            if inner_shape:
+                big = max(range(len(inner_shape)),
+                          key=lambda i: inner_shape[i])
+                dims[big] = pick_axes(mesh, inner_shape[big], fsdp, FSDP)
+            spec = _spec(mesh, dims)
+            if path and path[0] == "segments":
+                return P(*((None,) + tuple(spec)))
+            return spec
+        if path and path[0] == "segments":
+            inner = _rule_for_leaf(mesh, path, shape[1:])
+            return P(*((None,) + tuple(inner)))
+        return _rule_for_leaf(mesh, path, shape)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh,
+                batch_size: Optional[int] = None) -> Dict[str, P]:
+    group = FSDP + TP if cfg.dp_over_tp else FSDP
+    # degrade to the largest dividing prefix when the batch is smaller than
+    # the DP group (e.g. prefill batch 32 on a 256-chip pure-DP policy)
+    dp = (pick_axes(mesh, batch_size, group) or ()) if batch_size \
+        else _present(mesh, group)
+    specs: Dict[str, P] = {}
+    if cfg.input_mode == "tokens":
+        specs["tokens"] = _spec(mesh, [dp, None])
+    else:
+        specs["embeds"] = _spec(mesh, [dp, None, None])
+    specs["labels"] = _spec(mesh, [dp, None])
+    if cfg.mrope_sections is not None:
+        specs["positions"] = _spec(mesh, [None, dp, None])
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any) -> Any:
+    """Decode-cache shardings: batch over FSDP axes, channels over TP."""
+    dp = _present(mesh, FSDP)
+
+    def rule(key_path, leaf):
+        path = tuple(k.key if hasattr(k, "key") else str(k) for k in key_path)
+        shape = tuple(leaf.shape)
+        name = path[-1]
+        b_axes = pick_axes(mesh, shape[1], (dp))
+        if name in ("k", "v", "ckv", "kr", "conv"):
+            # (L, B, T, C): channels over TP
+            return _spec(mesh, [None, b_axes, None,
+                                pick_axes(mesh, shape[3], TP)])
+        if name == "state":
+            # (L, B, H, N, P): SSD heads over TP when divisible
+            return _spec(mesh, [None, b_axes,
+                                pick_axes(mesh, shape[2], TP), None, None])
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def shardings(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

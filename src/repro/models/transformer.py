@@ -1,0 +1,334 @@
+"""Unified LM assembly: segments of scanned layers + embeddings + chunked loss.
+
+Public entry points (all pure functions of (config, params, ...)):
+  - ``init_params``          fp32 master weights
+  - ``forward_hidden``       (B,S,D) final hidden states (+ MoE aux loss)
+  - ``lm_loss``              scalar CE (+aux), chunked over vocab — never
+                             materializes (T, V) logits
+  - ``init_cache``           decode caches for all segments
+  - ``prefill``              build caches from a prompt, return last logits
+  - ``decode_step``          one token against the caches
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig, Segment
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, seg: Segment, key) -> Params:
+    km, kf = jax.random.split(key)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if seg.mixer == "gqa":
+        p["mixer"] = L.init_gqa(cfg, km)
+    elif seg.mixer == "mla":
+        p["mixer"] = L.init_mla(cfg, km)
+    elif seg.mixer == "ssm":
+        p["mixer"] = L.init_ssm(cfg, km)
+    elif seg.mixer == "hybrid":
+        p["mixer"] = L.init_hybrid(cfg, km)
+    else:
+        raise ValueError(seg.mixer)
+    if seg.ffn == "mlp":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ffn"] = L.init_mlp(cfg, kf, d_ff=seg.d_ff)
+    elif seg.ffn == "moe":
+        p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ffn"] = L.init_moe(cfg, kf)
+    elif seg.ffn != "none":
+        raise ValueError(seg.ffn)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    keys = jax.random.split(key, len(cfg.segments) + 3)
+    params: Params = {}
+    if cfg.input_mode == "tokens":
+        params["embed"] = (
+            jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model),
+                              jnp.float32) * 0.02)
+    if not cfg.tie_embeddings:
+        params["head"] = (
+            jax.random.normal(keys[1], (cfg.d_model, cfg.vocab_size),
+                              jnp.float32) * 0.02)
+    params["final_ln"] = jnp.ones((cfg.d_model,), jnp.float32)
+    segs = {}
+    for i, seg in enumerate(cfg.segments):
+        lkeys = jax.random.split(keys[3 + i], seg.count)
+        segs[f"seg{i}"] = jax.vmap(
+            lambda k, _seg=seg: _init_layer(cfg, _seg, k))(lkeys)
+    params["segments"] = segs
+    return params
+
+
+# ---------------------------------------------------------------------------
+# layer application + segment scan
+# ---------------------------------------------------------------------------
+
+def _apply_layer(cfg: ModelConfig, seg: Segment, p: Params, x: jax.Array,
+                 rope, cache: Optional[Params], pos) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    cos, sin = rope
+    if cfg.dp_over_tp:
+        # small-model policy: every mesh axis is data parallelism
+        x = L.shard_hint(x, ("pod", "data", "model"), None, None)
+    elif x.shape[1] >= 2048:
+        # sequence-parallel residual stream (Megatron SP): between layers the
+        # (B, S, D) carry is sharded over BOTH batch (DP) and sequence (TP) —
+        # the scan-over-layers saved carries shrink by the TP degree.
+        # Attention re-gathers K/V internally; MLP stays token-pointwise.
+        x = L.shard_hint(x, L.DP_AXES, L.TP_AXIS, None)
+    else:
+        x = L.shard_hint(x, L.DP_AXES, None, None)
+    h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if seg.mixer == "gqa":
+        mix, new_cache = L.apply_gqa(cfg, p["mixer"], h, cos, sin,
+                                     window=seg.window, cache=cache, pos=pos)
+    elif seg.mixer == "mla":
+        mix, new_cache = L.apply_mla(cfg, p["mixer"], h, cos, sin,
+                                     window=seg.window, cache=cache, pos=pos)
+    elif seg.mixer == "ssm":
+        mix, new_cache = L.apply_ssm(cfg, p["mixer"], h, cache=cache)
+    elif seg.mixer == "hybrid":
+        mix, new_cache = L.apply_hybrid(cfg, p["mixer"], h, cos, sin,
+                                        window=seg.window, cache=cache, pos=pos)
+    else:
+        raise ValueError(seg.mixer)
+    x = x + mix
+    aux = jnp.zeros((), jnp.float32)
+    if seg.ffn == "mlp":
+        x = x + L.apply_mlp(p["ffn"], L.rmsnorm(x, p["ln2"], cfg.norm_eps))
+    elif seg.ffn == "moe":
+        y, aux = L.apply_moe(cfg, p["ffn"], L.rmsnorm(x, p["ln2"], cfg.norm_eps))
+        x = x + y
+    return x, new_cache, aux
+
+
+def _remat_wrap(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots
+    else:
+        policy = None  # save nothing: full recompute
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _apply_segment(cfg: ModelConfig, seg: Segment, stacked: Params,
+                   x: jax.Array, rope, caches: Optional[Params], pos,
+                   training: bool) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+    if not cfg.scan_layers:
+        # python-unrolled depth: used by the cost-model probes so XLA's
+        # cost_analysis sees every layer (scan bodies are counted once)
+        aux_total = jnp.zeros((), jnp.float32)
+        new_caches = []
+        take = lambda t, i: jax.tree_util.tree_map(lambda a: a[i], t)
+        for i in range(seg.count):
+            cache_l = take(caches, i) if caches is not None else None
+            x, nc, aux = _apply_layer(cfg, seg, take(stacked, i), x, rope,
+                                      cache_l, pos)
+            aux_total += aux
+            if nc is not None:
+                new_caches.append(nc)
+        stacked_caches = None
+        if new_caches:
+            stacked_caches = jax.tree_util.tree_map(
+                lambda *ls: jnp.stack(ls), *new_caches)
+        return x, stacked_caches, aux_total
+
+    if caches is None:
+        def body(carry, p_l):
+            y, _, aux = _apply_layer(cfg, seg, p_l, carry, rope, None, pos)
+            return y, aux
+        body = _remat_wrap(cfg, body) if training else body
+        x, auxs = jax.lax.scan(body, x, stacked)
+        return x, None, jnp.sum(auxs)
+
+    def body_c(carry, inp):
+        p_l, cache_l = inp
+        y, new_cache, aux = _apply_layer(cfg, seg, p_l, carry, rope, cache_l, pos)
+        return y, (new_cache, aux)
+
+    x, (new_caches, auxs) = jax.lax.scan(body_c, x, (stacked, caches))
+    return x, new_caches, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.input_mode == "tokens":
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(dtype)
+    else:
+        x = batch["embeds"].astype(dtype)
+    return x
+
+
+def _positions(cfg: ModelConfig, batch, b: int, s: int):
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+def _rope_for(cfg: ModelConfig, positions) -> Tuple[jax.Array, jax.Array]:
+    return L.rope_tables(positions, cfg.rotary_dim, cfg.rope_theta,
+                         cfg.mrope_sections)
+
+
+def _cast_params(cfg: ModelConfig, params: Params) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    def cast(a):
+        if a.dtype == jnp.float32:
+            return a.astype(dtype)
+        return a
+    return jax.tree_util.tree_map(cast, params)
+
+
+def forward_hidden(cfg: ModelConfig, params: Params,
+                   batch: Dict[str, jax.Array], *, training: bool = False,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Final hidden states (B, S, D) and summed MoE aux loss."""
+    cp = _cast_params(cfg, params)
+    x = _embed_inputs(cfg, cp, batch)
+    b, s, _ = x.shape
+    rope = _rope_for(cfg, _positions(cfg, batch, b, s))
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, seg in enumerate(cfg.segments):
+        x, _, aux = _apply_segment(cfg, seg, cp["segments"][f"seg{i}"],
+                                   x, rope, None, 0, training)
+        aux_total += aux
+    return L.rmsnorm(x, cp["final_ln"], cfg.norm_eps), aux_total
+
+
+def _head_matrix(cfg: ModelConfig, params: Params) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["head"]
+
+
+def _pick_chunk(t: int, want: int) -> int:
+    c = min(want, t)
+    while t % c != 0:
+        c -= 1
+    return c
+
+
+def lm_loss(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array]
+            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Token-chunked cross-entropy: logits live only per-chunk, in fp32."""
+    h, aux = forward_hidden(cfg, params, batch, training=True)
+    head = _head_matrix(cfg, _cast_params(cfg, params))
+    b, s, d = h.shape
+    t = b * s
+    hf = h.reshape(t, d)
+    labels = batch["labels"].reshape(t)
+    chunk = _pick_chunk(t, cfg.loss_chunk)
+    nc = t // chunk
+
+    def body(carry, inp):
+        nll_sum, n_tok = carry
+        hc, lc = inp                                 # (C, D), (C,)
+        logits = (hc @ head).astype(jnp.float32)     # (C, V)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[:, None], axis=-1)[:, 0]
+        valid = (lc >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (nll_sum + nll.sum(), n_tok + valid.sum()), None
+
+    (nll_sum, n_tok), _ = jax.lax.scan(
+        jax.checkpoint(body),    # logits recomputed in backward, never stored
+        (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hf.reshape(nc, chunk, d), labels.reshape(nc, chunk)))
+    ce = nll_sum / jnp.maximum(n_tok, 1.0)
+    loss = ce + aux
+    return loss, {"ce": ce, "aux": aux, "tokens": n_tok}
+
+
+# ---------------------------------------------------------------------------
+# serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, cache_len: int) -> Params:
+    """Zeroed caches for every segment, stacked along layer count."""
+    dtype = jnp.dtype(cfg.dtype)
+    caches: Params = {}
+    for i, seg in enumerate(cfg.segments):
+        c: Params = {}
+        if seg.mixer in ("gqa", "hybrid"):
+            kv = cfg.n_kv_heads * cfg.head_dim
+            c["k"] = jnp.zeros((seg.count, batch_size, cache_len, kv), dtype)
+            c["v"] = jnp.zeros((seg.count, batch_size, cache_len, kv), dtype)
+        if seg.mixer == "mla":
+            m = cfg.mla
+            c["ckv"] = jnp.zeros(
+                (seg.count, batch_size, cache_len, m.kv_lora_rank), dtype)
+            c["kr"] = jnp.zeros(
+                (seg.count, batch_size, cache_len, m.qk_rope_dim), dtype)
+        if seg.mixer in ("ssm", "hybrid"):
+            s = cfg.ssm
+            c["state"] = jnp.zeros(
+                (seg.count, batch_size, s.n_heads(cfg.d_model), s.d_state,
+                 s.head_dim), jnp.float32)
+            c["conv"] = jnp.zeros(
+                (seg.count, batch_size, s.conv_kernel - 1,
+                 s.conv_channels(cfg.d_model)), dtype)
+        caches[f"seg{i}"] = c
+    return caches
+
+
+def _run_with_cache(cfg: ModelConfig, params: Params, x: jax.Array,
+                    rope, caches: Params, pos) -> Tuple[jax.Array, Params]:
+    new_caches: Params = {}
+    for i, seg in enumerate(cfg.segments):
+        x, nc, _ = _apply_segment(cfg, seg, params["segments"][f"seg{i}"],
+                                  x, rope, caches[f"seg{i}"], pos,
+                                  training=False)
+        new_caches[f"seg{i}"] = nc
+    return x, new_caches
+
+
+def prefill(cfg: ModelConfig, params: Params, batch: Dict[str, jax.Array],
+            caches: Params) -> Tuple[jax.Array, Params]:
+    """Consume a prompt, fill caches, return last-position logits (B, V)."""
+    cp = _cast_params(cfg, params)
+    x = _embed_inputs(cfg, cp, batch)
+    b, s, _ = x.shape
+    rope = _rope_for(cfg, _positions(cfg, batch, b, s))
+    x, new_caches = _run_with_cache(cfg, cp, x, rope, caches, jnp.int32(0))
+    h = L.rmsnorm(x[:, -1], cp["final_ln"], cfg.norm_eps)
+    logits = (h @ _head_matrix(cfg, cp)).astype(jnp.float32)
+    return logits, new_caches
+
+
+def decode_step(cfg: ModelConfig, params: Params, token: jax.Array,
+                caches: Params, pos: jax.Array
+                ) -> Tuple[jax.Array, Params]:
+    """One decode step. token: (B,) int32 (or (B, D) embeds); pos: scalar."""
+    cp = _cast_params(cfg, params)
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.input_mode == "tokens":
+        x = jnp.take(cp["embed"], token[:, None], axis=0).astype(dtype)
+    else:
+        x = token[:, None, :].astype(dtype)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    rope = _rope_for(cfg, positions)
+    x, new_caches = _run_with_cache(cfg, cp, x, rope, caches, pos)
+    h = L.rmsnorm(x[:, 0], cp["final_ln"], cfg.norm_eps)
+    logits = (h @ _head_matrix(cfg, cp)).astype(jnp.float32)
+    return logits, new_caches

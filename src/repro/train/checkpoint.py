@@ -1,0 +1,110 @@
+"""Step-atomic checkpointing with manifest + elastic re-mesh restore.
+
+Layout:  <dir>/step_<N>/
+           manifest.json     — tree structure, shapes, dtypes, step
+           leaf_<i>.npy      — one file per pytree leaf (host numpy)
+         <dir>/step_<N>.tmp  → fsync → rename (atomic publish)
+
+Restore rebuilds the pytree on host and (optionally) ``device_put``s it with
+*new* shardings — restoring a 512-chip checkpoint onto a 256-chip mesh (or a
+laptop) is the same code path, which is the elastic-scaling story: shardings
+live in the runtime, never in the checkpoint.
+
+A production multi-host deployment writes per-host shard files with the same
+manifest; this container is single-process so leaves are global. The format
+keeps that extension trivial (manifest records a ``shards`` field).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree: Any):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save(directory: str, tree: Any, *, step: int, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, treedef = _tree_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(flat),
+        "shards": 1,
+        "leaves": [],
+    }
+    for i, leaf in enumerate(flat):
+        arr = np.asarray(leaf)
+        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
+        manifest["leaves"].append(
+            {"shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)           # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    steps = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")
+             and os.path.exists(os.path.join(directory, d, "manifest.json"))]
+    return max(steps) if steps else None
+
+
+def restore(directory: str, step: int, *, like: Any = None,
+            shardings: Any = None) -> Any:
+    """Load step's tree. ``like`` supplies the treedef (required); with
+    ``shardings`` the leaves are device_put onto the (possibly different)
+    mesh — elastic re-mesh."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves = [np.load(os.path.join(path, f"leaf_{i}.npy"))
+              for i in range(manifest["n_leaves"])]
+    if like is None:
+        raise ValueError("restore requires `like` for the tree structure")
+    _, treedef = jax.tree_util.tree_flatten(like)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda leaf, sh: jax.device_put(leaf, sh), tree, shardings)
+    return tree
+
+
+def restore_latest(directory: str, *, like: Any = None,
+                   shardings: Any = None) -> Optional[Tuple[Any, int]]:
+    step = latest_step(directory)
+    if step is None:
+        return None
+    if like is None:
+        # structureless load: rebuild as flat list (Trainer stores treedef
+        # via its live objects; used only in tests with `like`)
+        raise ValueError("restore_latest requires `like`")
+    return restore(directory, step, like=like, shardings=shardings), step

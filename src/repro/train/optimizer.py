@@ -1,0 +1,118 @@
+"""AdamW from scratch (no optax): fp32 master weights + fully-sharded moments.
+
+Optimizer state leaves mirror the parameter pytree, so they inherit the 2-D
+FSDP×TP parameter shardings (ZeRO-3-equivalent partitioning for free).
+Includes global-norm clipping, decoupled weight decay (matrix params only),
+linear-warmup + cosine decay, and an optional bf16 gradient-compression mode
+for cross-pod reductions (error feedback keeps it unbiased over time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # gradient compression for the DP all-reduce (bf16 + error feedback)
+    compress_grads: bool = False
+
+
+class OptState(NamedTuple):
+    step: jax.Array      # scalar int32
+    m: Any               # first moment, fp32, mirrors params
+    v: Any               # second moment, fp32, mirrors params
+    err: Optional[Any]   # error-feedback residual (compress_grads only)
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> OptState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    err = (jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), params)
+        if cfg.compress_grads else None)
+    return OptState(jnp.zeros((), jnp.int32), zeros,
+                    jax.tree_util.tree_map(jnp.copy, zeros), err)
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step_f = step.astype(jnp.float32)
+    warm = step_f / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step_f - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    decay = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * jnp.where(step_f < cfg.warmup_steps, warm, decay)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def compress_bf16(grads: Any, err: Any) -> Tuple[Any, Any]:
+    """bf16 quantization with error feedback: g_q = bf16(g + e); e' = g+e−g_q.
+
+    Halves DP all-reduce bytes; the residual makes the bias vanish across
+    steps. Applied before the (implicit, GSPMD-inserted) gradient reduction.
+    """
+    def one(g, e):
+        total = g.astype(jnp.float32) + e
+        q = total.astype(jnp.bfloat16)
+        return q, total - q.astype(jnp.float32)
+    flat = jax.tree_util.tree_map(one, grads, err)
+    comp = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return comp, new_err
+
+
+def apply_updates(
+    params: Any, grads: Any, state: OptState, cfg: OptConfig
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = state.step + 1
+    lr = schedule(cfg, step)
+
+    err = state.err
+    if cfg.compress_grads:
+        grads, err = compress_bf16(grads, err)
+
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g * clip
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled decay on matrices only
+            delta = delta + cfg.weight_decay * p
+        return p - lr * delta, m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree_util.tree_map(
+        lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(
+        lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree_util.tree_map(
+        lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    stats = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_m, new_v, err), stats

@@ -1,0 +1,166 @@
+"""Train-step factory: grad accumulation, remat, sharded AdamW, watchdog.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+explicit in/out shardings — the object the multi-pod dry-run lowers.
+``Trainer`` adds the host-side loop: data, checkpoints, fault handling,
+straggler detection (per-step wall-time EWMA).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import checkpoint as ckpt_lib
+from repro.train.optimizer import OptConfig, OptState, apply_updates, init_opt_state
+from repro.utils import logger
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    accum_steps: int = 1            # microbatch gradient accumulation
+    checkpoint_every: int = 100
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    straggler_slack: float = 2.0    # step slower than slack×EWMA ⇒ flagged
+    log_every: int = 10
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig
+                    ) -> Callable[[Any, OptState, Dict[str, jax.Array]],
+                                  Tuple[Any, OptState, Dict[str, jax.Array]]]:
+    """Pure (params, opt_state, batch) → (params, opt_state, metrics)."""
+    accum = tcfg.accum_steps
+
+    def loss_fn(params, batch):
+        return T.lm_loss(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(i, carry):
+                gsum, lsum = carry
+                mb = jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                        i, 1, axis=0)[0],
+                    batch)
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return gsum, lsum + l
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, loss_sum = jax.lax.fori_loop(
+                0, accum, micro, (zeros, jnp.zeros((), jnp.float32)))
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            loss = loss_sum / accum
+            metrics = {"ce": loss, "aux": jnp.zeros(()),
+                       "tokens": jnp.zeros(())}
+        params, opt_state, stats = apply_updates(
+            params, grads, opt_state, tcfg.opt)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics.update(stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+class Trainer:
+    """Host loop: jit'd step + checkpoint/restart + straggler watchdog."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 params: Any, data: Iterator[Dict[str, jax.Array]],
+                 step_fn: Optional[Callable] = None):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.params = params
+        self.opt_state = init_opt_state(params, tcfg.opt)
+        self.data = data
+        self.step = 0
+        self._jit_step = jax.jit(step_fn or make_train_step(cfg, tcfg),
+                                 donate_argnums=(0, 1))
+        self._ewma: Optional[float] = None
+        self.stragglers: list = []
+        self._preempted = False
+
+    # -- preemption -----------------------------------------------------
+    def install_signal_handlers(self) -> None:
+        """SIGTERM/SIGINT → finish the current step, checkpoint, exit clean.
+
+        The standard cloud-TPU preemption contract: the maintenance notice
+        arrives as SIGTERM; a run that checkpoints on it loses at most one
+        step on restart (restore() + resumable data make it exact)."""
+        import signal
+
+        def _handler(signum, frame):
+            logger.warning("received signal %d — checkpoint then stop", signum)
+            self._preempted = True
+
+        signal.signal(signal.SIGTERM, _handler)
+        signal.signal(signal.SIGINT, _handler)
+
+    # -- fault tolerance ---------------------------------------------------
+    def save(self) -> Optional[str]:
+        if self.tcfg.checkpoint_dir is None:
+            return None
+        return ckpt_lib.save(
+            self.tcfg.checkpoint_dir,
+            {"params": self.params, "opt_state": self.opt_state},
+            step=self.step, keep=self.tcfg.keep_checkpoints)
+
+    def restore(self) -> bool:
+        if self.tcfg.checkpoint_dir is None:
+            return False
+        if ckpt_lib.latest_step(self.tcfg.checkpoint_dir) is None:
+            return False
+        like = {"params": self.params, "opt_state": self.opt_state}
+        state, step = ckpt_lib.restore_latest(
+            self.tcfg.checkpoint_dir, like=like)
+        self.params = state["params"]
+        self.opt_state = state["opt_state"]
+        self.step = step
+        logger.info("restored checkpoint at step %d", step)
+        return True
+
+    # -- loop ---------------------------------------------------------------
+    def run(self, num_steps: int) -> Dict[str, float]:
+        last: Dict[str, float] = {}
+        for _ in range(num_steps):
+            batch = next(self.data)
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self._jit_step(
+                self.params, self.opt_state, batch)
+            metrics = jax.block_until_ready(metrics)
+            dt = time.perf_counter() - t0
+            self.step += 1
+            # straggler watchdog: EWMA of step time, flag big outliers
+            if self._ewma is None:
+                self._ewma = dt
+            else:
+                if dt > self.tcfg.straggler_slack * self._ewma and self.step > 3:
+                    self.stragglers.append((self.step, dt, self._ewma))
+                    logger.warning("straggler step %d: %.3fs vs EWMA %.3fs",
+                                   self.step, dt, self._ewma)
+                self._ewma = 0.9 * self._ewma + 0.1 * dt
+            last = {k: float(v) for k, v in metrics.items()}
+            last["step_time_s"] = dt
+            if self.step % self.tcfg.log_every == 0:
+                logger.info("step %d loss %.4f lr %.2e gnorm %.3f (%.2fs)",
+                            self.step, last.get("loss", float("nan")),
+                            last.get("lr", 0), last.get("grad_norm", 0), dt)
+            if (self.tcfg.checkpoint_dir is not None
+                    and self.step % self.tcfg.checkpoint_every == 0):
+                self.save()
+            if self._preempted:
+                self.save()
+                logger.warning("preempted at step %d — state saved", self.step)
+                break
+        return last

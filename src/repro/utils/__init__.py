@@ -1,0 +1,78 @@
+"""Shared small utilities: timers, rng plumbing, tree helpers, logging."""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import logging
+import time
+from typing import Any, Callable, Dict, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+logger = logging.getLogger("repro")
+if not logger.handlers:
+    _h = logging.StreamHandler()
+    _h.setFormatter(logging.Formatter("[%(asctime)s] %(name)s %(levelname)s %(message)s", "%H:%M:%S"))
+    logger.addHandler(_h)
+    logger.setLevel(logging.INFO)
+
+
+class StageTimer:
+    """Wall-clock per-stage timer used by the SC_RB pipeline and benchmarks.
+
+    Records {stage: seconds}; ``block_until_ready`` is applied to jax outputs
+    so timings are honest under async dispatch.
+    """
+
+    def __init__(self) -> None:
+        self.times: Dict[str, float] = {}
+
+    @contextlib.contextmanager
+    def stage(self, name: str) -> Iterator[None]:
+        t0 = time.perf_counter()
+        yield
+        self.times[name] = self.times.get(name, 0.0) + time.perf_counter() - t0
+
+    def timed(self, name: str, fn: Callable, *args, **kwargs):
+        with self.stage(name):
+            out = fn(*args, **kwargs)
+            out = jax.block_until_ready(out)
+        return out
+
+    @property
+    def total(self) -> float:
+        return sum(self.times.values())
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{k}={v:.3f}s" for k, v in self.times.items())
+        return f"StageTimer({inner}, total={self.total:.3f}s)"
+
+
+def tree_bytes(tree: Any) -> int:
+    """Total byte footprint of a pytree of arrays / ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize for l in leaves)
+
+
+def tree_params(tree: Any) -> int:
+    """Total element count of a pytree of arrays / ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(np.prod(l.shape)) for l in leaves)
+
+
+def fold_key(key: jax.Array, *names: str) -> jax.Array:
+    """Deterministically derive a subkey from string tags (stable across hosts)."""
+    for name in names:
+        h = 2166136261
+        for ch in name.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+        key = jax.random.fold_in(key, int(h))
+    return key
+
+
+def asdict_shallow(obj: Any) -> Dict[str, Any]:
+    if dataclasses.is_dataclass(obj):
+        return {f.name: getattr(obj, f.name) for f in dataclasses.fields(obj)}
+    raise TypeError(f"not a dataclass: {obj!r}")

@@ -1,0 +1,76 @@
+"""Eigensolver correctness against dense oracles (numpy.linalg.eigh)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eigensolver
+
+
+def _random_psd(key, n, decay=0.9):
+    """PSD matrix with geometric spectrum — eigenvalues known exactly."""
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n)))
+    lam = decay ** jnp.arange(n)
+    return (q * lam[None, :]) @ q.T, np.asarray(lam)
+
+
+@pytest.mark.parametrize("n,k", [(60, 4), (120, 8)])
+def test_lobpcg_matches_dense(n, k):
+    a, lam = _random_psd(jax.random.PRNGKey(n), n)
+    res = eigensolver.lobpcg(
+        lambda u: a @ u,
+        jax.random.normal(jax.random.PRNGKey(1), (n, k)),
+        max_iters=400, tol=1e-7)
+    np.testing.assert_allclose(np.asarray(res.theta), lam[:k], rtol=1e-4, atol=1e-5)
+    # eigenvector check: residual ‖Av − λv‖ small
+    assert float(np.max(np.asarray(res.resnorms))) < 1e-3
+
+
+def test_lobpcg_clustered_spectrum():
+    """Near-degenerate top eigenvalues (the paper's covtype regime)."""
+    n = 100
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(0), (n, n)))
+    lam = jnp.concatenate([
+        jnp.array([1.0, 1.0 - 1e-4, 1.0 - 2e-4, 0.9]),
+        0.5 * 0.9 ** jnp.arange(n - 4)])
+    a = (q * lam[None, :]) @ q.T
+    res = eigensolver.lobpcg(
+        lambda u: a @ u,
+        jax.random.normal(jax.random.PRNGKey(1), (n, 6)),
+        max_iters=600, tol=1e-6)
+    np.testing.assert_allclose(np.asarray(res.theta)[:4],
+                               np.asarray(lam)[:4], atol=1e-4)
+
+
+def test_lobpcg_stability_no_blowup():
+    """Regression: float32 whitening must not amplify noise directions
+    (observed 1e15 blow-up before rcond/QR hardening)."""
+    n = 200
+    a, _ = _random_psd(jax.random.PRNGKey(5), n, decay=0.999)
+    res = eigensolver.lobpcg(
+        lambda u: a @ u,
+        jax.random.normal(jax.random.PRNGKey(2), (n, 10)),
+        max_iters=500, tol=1e-8)
+    assert float(np.max(np.asarray(res.theta))) < 1.5
+
+
+@pytest.mark.parametrize("solver", ["lanczos", "subspace"])
+def test_baseline_solvers(solver):
+    n, k = 80, 4
+    a, lam = _random_psd(jax.random.PRNGKey(7), n, decay=0.8)
+    res = eigensolver.top_k_eigenpairs(
+        lambda u: a @ u, n, k, jax.random.PRNGKey(3),
+        solver=solver, max_iters=150, tol=1e-7)
+    np.testing.assert_allclose(np.asarray(res.theta)[:k], lam[:k], rtol=1e-3, atol=1e-4)
+
+
+def test_lobpcg_beats_subspace_iteration_on_matvecs():
+    """LOBPCG (PRIMME-class) should converge in fewer block mat-vecs than
+    plain subspace iteration on a slowly-decaying spectrum — the Fig. 3
+    claim, solver-vs-solver."""
+    n, k = 150, 6
+    a, _ = _random_psd(jax.random.PRNGKey(11), n, decay=0.97)
+    x0 = jax.random.normal(jax.random.PRNGKey(4), (n, k))
+    lo = eigensolver.lobpcg(lambda u: a @ u, x0, max_iters=500, tol=1e-5)
+    su = eigensolver.subspace_iteration(lambda u: a @ u, x0, max_iters=500, tol=1e-5)
+    assert int(lo.iterations) < int(su.iterations)

@@ -1,0 +1,146 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) and the XLA
+production fallback against the pure-jnp oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rb_inputs(key, n, d, r, d_g):
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (n, d), jnp.float32) * 2.0
+    widths = jax.random.gamma(ks[1], 2.0, (r, d), dtype=jnp.float32) * 0.5 + 1e-3
+    biases = jax.random.uniform(ks[2], (r, d), jnp.float32) * widths
+    hash_a = (
+        jax.random.randint(ks[3], (r, d), 0, 2**31 - 1).astype(jnp.uint32)
+        * jnp.uint32(2) + jnp.uint32(1))
+    hash_c = jax.random.randint(ks[4], (r,), 0, 2**31 - 1).astype(jnp.uint32)
+    return x, widths, biases, hash_a, hash_c
+
+
+@pytest.mark.parametrize("n,d,r,d_g", [
+    (64, 2, 8, 64),
+    (100, 3, 16, 128),     # n not divisible by tile
+    (256, 7, 4, 256),
+    (513, 16, 32, 512),    # odd n, wide d
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_rb_binning_matches_ref(n, d, r, d_g, impl):
+    inputs = _rb_inputs(jax.random.PRNGKey(n + r), n, d, r, d_g)
+    want = ref.rb_binning_ref(*inputs, d_g)
+    got = ops.rb_binning(*inputs, d_g=d_g, impl=impl)
+    assert got.shape == (n, r) and got.dtype == jnp.int32
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,r,d_g,k", [
+    (64, 4, 64, 8),
+    (100, 8, 128, 3),      # ragged n
+    (256, 16, 64, 32),
+    (300, 12, 256, 5),     # r not divisible by block_r=4 -> falls to divisor
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_z_matmul_matches_ref(n, r, d_g, k, impl, dtype):
+    key = jax.random.PRNGKey(n * r + k)
+    d = r * d_g
+    idx = (
+        jax.random.randint(key, (n, r), 0, d_g)
+        + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    v = jax.random.normal(jax.random.PRNGKey(1), (d, k), jnp.float32).astype(dtype)
+    s = jax.random.uniform(jax.random.PRNGKey(2), (n,), jnp.float32) + 0.5
+    want = ref.z_matmul_ref(idx, v.astype(jnp.float32), s)
+    got = ops.z_matmul(idx, v, s, d_g=d_g, impl=impl)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want), rtol=tol, atol=tol * r)
+
+
+@pytest.mark.parametrize("n,r,d_g,k", [
+    (64, 4, 64, 8),
+    (100, 8, 128, 3),
+    (256, 16, 64, 32),
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_zt_matmul_matches_ref(n, r, d_g, k, impl):
+    key = jax.random.PRNGKey(n + r + k)
+    d = r * d_g
+    idx = (
+        jax.random.randint(key, (n, r), 0, d_g)
+        + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    u = jax.random.normal(jax.random.PRNGKey(3), (n, k), jnp.float32)
+    s = jax.random.uniform(jax.random.PRNGKey(4), (n,), jnp.float32) + 0.5
+    want = ref.zt_matmul_ref(idx, u, s, d)
+    got = ops.zt_matmul(idx, u, s, d, d_g=d_g, impl=impl)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_zt_z_adjoint():
+    """⟨Z u, v⟩ == ⟨u, Zᵀ v⟩ — the two kernels implement adjoint maps."""
+    key = jax.random.PRNGKey(0)
+    n, r, d_g, k = 128, 8, 64, 4
+    d = r * d_g
+    idx = (
+        jax.random.randint(key, (n, r), 0, d_g)
+        + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    s = jax.random.uniform(jax.random.PRNGKey(1), (n,)) + 0.1
+    u = jax.random.normal(jax.random.PRNGKey(2), (n, k))
+    v = jax.random.normal(jax.random.PRNGKey(3), (d, k))
+    zu = ops.z_matmul(idx, v, s, d_g=d_g, impl="xla")     # (n, k)
+    ztu = ops.zt_matmul(idx, u, s, d, d_g=d_g, impl="xla")  # (d, k)
+    lhs = float(jnp.sum(zu * u))
+    rhs = float(jnp.sum(ztu * v))
+    assert abs(lhs - rhs) < 1e-2 * max(abs(lhs), 1.0)
+
+
+@pytest.mark.parametrize("n,d,k", [(64, 2, 3), (1000, 8, 16), (1025, 16, 7)])
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_kmeans_assign_matches_ref(n, d, k, impl):
+    x = jax.random.normal(jax.random.PRNGKey(n), (n, d), jnp.float32)
+    c = jax.random.normal(jax.random.PRNGKey(d), (k, d), jnp.float32)
+    want_l, want_d = ref.kmeans_assign_ref(x, c)
+    got_l, got_d = ops.kmeans_assign(x, c, impl=impl)
+    assert np.array_equal(np.asarray(got_l), np.asarray(want_l))
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,t,hd,causal,window", [
+    (64, 64, 16, True, None),
+    (128, 128, 32, True, None),
+    (64, 64, 16, True, 24),       # sliding window
+    (128, 128, 16, False, None),  # bidirectional
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(s, t, hd, causal, window, dtype):
+    key = jax.random.PRNGKey(s + hd)
+    b, h = 2, 3
+    q = jax.random.normal(key, (b, s, h, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, t, h, hd),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, t, h, hd),
+                          jnp.float32).astype(dtype)
+    want = ops.flash_attention(q, k, v, causal=causal, window=window,
+                               impl="xla")
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              impl="pallas")
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        rtol=tol, atol=tol)
+
+
+def test_flash_attention_blocked_tiling():
+    """Non-trivial multi-block grid (block 64 over 256 seq)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+    from repro.kernels.ref import flash_attention_ref
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (2, 256, 32), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (2, 256, 32))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (2, 256, 32))
+    got = flash_attention_pallas(q, k, v, causal=True, block_q=64,
+                                 block_kv=64, interpret=True)
+    want = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)

@@ -1,0 +1,71 @@
+"""Clustering metric unit tests (NMI / RI / FM / Acc + average rank)."""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+
+
+def test_perfect_clustering_all_ones():
+    y = np.array([0, 0, 1, 1, 2, 2])
+    m = metrics.all_metrics(y, y)
+    for name, v in m.items():
+        assert v == pytest.approx(1.0), name
+
+
+def test_label_permutation_invariance():
+    y_true = np.array([0, 0, 1, 1, 2, 2, 0, 1])
+    y_perm = np.array([2, 2, 0, 0, 1, 1, 2, 0])   # relabeled
+    m = metrics.all_metrics(y_perm, y_true)
+    for name, v in m.items():
+        assert v == pytest.approx(1.0), name
+
+
+def test_random_labels_score_low():
+    rng = np.random.default_rng(0)
+    y_true = np.repeat(np.arange(10), 200)
+    y_rand = rng.integers(0, 10, size=2000)
+    m = metrics.all_metrics(y_rand, y_true)
+    assert m["nmi"] < 0.05
+    assert m["acc"] < 0.2
+
+
+def test_rand_index_known_value():
+    # classic example: RI computable by hand
+    y_true = np.array([0, 0, 0, 1, 1, 1])
+    y_pred = np.array([0, 0, 1, 1, 2, 2])
+    # pairs: TP = C(2,2)+C(2,2)... compute directly
+    n = len(y_true)
+    agree = 0
+    total = 0
+    for i in range(n):
+        for j in range(i + 1, n):
+            total += 1
+            same_t = y_true[i] == y_true[j]
+            same_p = y_pred[i] == y_pred[j]
+            agree += int(same_t == same_p)
+    assert metrics.rand_index(y_pred, y_true) == pytest.approx(agree / total)
+
+
+def test_accuracy_hungarian_nontrivial():
+    # predicted cluster 0 mostly maps to true 1 and vice versa
+    y_true = np.array([0, 0, 0, 1, 1, 1])
+    y_pred = np.array([1, 1, 0, 0, 0, 1])
+    # best map: pred1→true0 (2 hits), pred0→true1 (2 hits) = 4/6
+    assert metrics.accuracy(y_pred, y_true) == pytest.approx(4 / 6)
+
+
+def test_average_rank_scores():
+    per = {
+        "a": {"nmi": 0.9, "acc": 0.9},
+        "b": {"nmi": 0.5, "acc": 0.5},
+        "c": {"nmi": 0.7, "acc": 0.7},
+    }
+    ranks = metrics.average_rank_scores(per)
+    assert ranks["a"] == 1.0 and ranks["c"] == 2.0 and ranks["b"] == 3.0
+
+
+def test_average_rank_ties_share_mean():
+    per = {"a": {"m": 0.5}, "b": {"m": 0.5}, "c": {"m": 0.1}}
+    ranks = metrics.average_rank_scores(per)
+    assert ranks["a"] == ranks["b"] == pytest.approx(1.5)
+    assert ranks["c"] == pytest.approx(3.0)

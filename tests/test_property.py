@@ -1,0 +1,157 @@
+"""Property-based tests (hypothesis) over the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rb
+from repro.core.metrics import accuracy, nmi, rand_index
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+_settings = dict(max_examples=15, deadline=None)
+
+
+@settings(**_settings)
+@given(
+    n=st.integers(8, 120),
+    d=st.integers(1, 6),
+    r=st.integers(1, 24),
+    seed=st.integers(0, 2**20),
+    sigma=st.floats(0.05, 10.0),
+)
+def test_rb_idx_always_in_grid_range(n, d, r, seed, sigma):
+    """Every hashed feature index lands inside its grid's column strip —
+    for any data scale, any bandwidth, any grid count."""
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=(n, d)) * rng.uniform(0.1, 100)).astype(np.float32)
+    params = rb.make_rb_params(jax.random.PRNGKey(seed), r, d, sigma, d_g=256)
+    idx = np.asarray(rb.rb_transform(jnp.asarray(x), params))
+    grid = idx // 256
+    assert idx.min() >= 0 and idx.max() < r * 256
+    assert np.array_equal(grid, np.broadcast_to(np.arange(r), (n, r)))
+
+
+@settings(**_settings)
+@given(
+    n=st.integers(4, 64),
+    r=st.integers(1, 8),
+    k=st.integers(1, 8),
+    seed=st.integers(0, 2**20),
+)
+def test_spmm_adjoint_property(n, r, k, seed):
+    """⟨Z·v, u⟩ = ⟨v, Zᵀ·u⟩ for random ELL patterns and scales."""
+    d_g = 64
+    d = r * d_g
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    idx = (jax.random.randint(ks[0], (n, r), 0, d_g)
+           + jnp.arange(r, dtype=jnp.int32)[None] * d_g)
+    s = jax.random.uniform(ks[1], (n,)) + 0.1
+    u = jax.random.normal(ks[2], (n, k))
+    v = jax.random.normal(ks[3], (d, k))
+    zu = ops.z_matmul(idx, v, s, d_g=d_g, impl="xla")
+    ztv = ops.zt_matmul(idx, u, s, d, d_g=d_g, impl="xla")
+    lhs = float(jnp.vdot(zu, u))
+    rhs = float(jnp.vdot(v, ztv))
+    assert abs(lhs - rhs) <= 1e-3 * max(1.0, abs(lhs))
+
+
+@settings(**_settings)
+@given(
+    n=st.integers(10, 200),
+    k=st.integers(2, 8),
+    seed=st.integers(0, 2**20),
+)
+def test_metric_bounds_and_perfect_invariance(n, k, seed):
+    """All metrics ∈ [0,1]; permuting labels never changes any metric."""
+    rng = np.random.default_rng(seed)
+    y_true = rng.integers(0, k, size=n)
+    y_pred = rng.integers(0, k, size=n)
+    for fn in (accuracy, nmi, rand_index):
+        v = fn(y_pred, y_true)
+        assert 0.0 <= v <= 1.0 + 1e-9
+    perm = rng.permutation(k)
+    assert accuracy(perm[y_pred], y_true) == pytest.approx(
+        accuracy(y_pred, y_true))
+
+
+@settings(**_settings)
+@given(
+    n=st.integers(20, 100),
+    seed=st.integers(0, 2**20),
+    decay=st.floats(0.3, 0.95),
+)
+def test_lobpcg_eigenvalues_bounded_by_operator_norm(n, seed, decay):
+    """Ritz values of a PSD operator always lie in [0, λmax]."""
+    from repro.core.eigensolver import lobpcg
+    key = jax.random.PRNGKey(seed)
+    q, _ = jnp.linalg.qr(jax.random.normal(key, (n, n)))
+    lam = decay ** jnp.arange(n)
+    a = (q * lam[None]) @ q.T
+    res = lobpcg(lambda u: a @ u,
+                 jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 4)),
+                 max_iters=100, tol=1e-6)
+    theta = np.asarray(res.theta)
+    assert np.all(theta <= 1.0 + 1e-3)
+    assert np.all(theta >= -1e-5)
+
+
+@settings(**_settings)
+@given(
+    b=st.integers(1, 4),
+    s=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**20),
+)
+def test_causal_attention_is_causal(b, s, seed):
+    """Perturbing future tokens never changes past outputs."""
+    from repro.models.layers import causal_attention
+    key = jax.random.PRNGKey(seed)
+    h, hd = 2, 8
+    q = jax.random.normal(key, (b, s, h, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, h, hd))
+    out1 = causal_attention(q, k, v, chunk=16)
+    cut = s // 2
+    k2 = k.at[:, cut:].set(jax.random.normal(jax.random.fold_in(key, 3),
+                                             (b, s - cut, h, hd)))
+    v2 = v.at[:, cut:].set(0.0)
+    out2 = causal_attention(q, k2, v2, chunk=16)
+    np.testing.assert_allclose(np.asarray(out1[:, :cut]),
+                               np.asarray(out2[:, :cut]), atol=1e-5)
+
+
+@settings(**_settings)
+@given(
+    s=st.sampled_from([32, 64]),
+    window=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**10),
+)
+def test_sliding_window_masks_old_tokens(s, window, seed):
+    """SWA output is independent of keys older than the window."""
+    from repro.models.layers import causal_attention
+    key = jax.random.PRNGKey(seed)
+    q = jax.random.normal(key, (1, s, 1, 8))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, s, 1, 8))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, s, 1, 8))
+    out1 = causal_attention(q, k, v, window=window, chunk=16)
+    # scramble everything older than the window for the last query
+    k2 = k.at[:, : s - window].set(
+        jax.random.normal(jax.random.fold_in(key, 3), (1, s - window, 1, 8)))
+    out2 = causal_attention(q, k2, v, window=window, chunk=16)
+    np.testing.assert_allclose(np.asarray(out1[:, -1]),
+                               np.asarray(out2[:, -1]), atol=1e-5)
+
+
+@settings(**_settings)
+@given(seed=st.integers(0, 2**20), vocab=st.integers(32, 512))
+def test_data_pipeline_pure_in_step(seed, vocab):
+    """batch_at(t) is a pure function — replay equals original."""
+    from repro.data.tokens import SyntheticTokens
+    ds = SyntheticTokens(vocab_size=vocab, batch=2, seq_len=16, seed=seed)
+    a = ds.batch_at(5)
+    b = ds.batch_at(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < vocab

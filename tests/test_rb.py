@@ -1,0 +1,93 @@
+"""Unit tests for Random Binning feature generation (Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rb
+
+
+@pytest.fixture(scope="module")
+def data():
+    rng = np.random.default_rng(0)
+    return rng.normal(size=(500, 6)).astype(np.float32)
+
+
+def test_widths_follow_gamma2(data):
+    """p(ω) ∝ ω·k''(ω) for Laplacian kernel is Gamma(shape=2, scale=σ):
+    mean 2σ, var 2σ²."""
+    params = rb.make_rb_params(jax.random.PRNGKey(0), 4096, 3, sigma=0.7)
+    w = np.asarray(params.widths).ravel()
+    assert abs(w.mean() - 2 * 0.7) < 0.02
+    assert abs(w.var() - 2 * 0.7**2) < 0.05
+
+
+def test_biases_within_widths(data):
+    params = rb.make_rb_params(jax.random.PRNGKey(1), 64, 6, sigma=1.0)
+    assert np.all(np.asarray(params.biases) >= 0)
+    assert np.all(np.asarray(params.biases) <= np.asarray(params.widths))
+
+
+def test_idx_shape_and_range(data):
+    params = rb.make_rb_params(jax.random.PRNGKey(2), 32, 6, sigma=1.0, d_g=512)
+    idx = rb.rb_transform(jnp.asarray(data), params)
+    assert idx.shape == (500, 32) and idx.dtype == jnp.int32
+    idxn = np.asarray(idx)
+    # grid g owns columns [g·d_g, (g+1)·d_g)
+    grid_of = idxn // 512
+    assert np.array_equal(grid_of, np.broadcast_to(np.arange(32), (500, 32)))
+
+
+def test_collision_prob_matches_kernel(data):
+    """E[fraction of shared grids] = k(x,y): the heart of RB (Eq. 4)."""
+    x = data[:120]
+    sigma = 1.5
+    params = rb.make_rb_params(jax.random.PRNGKey(3), 2048, 6, sigma, d_g=4096)
+    idx = np.asarray(rb.rb_transform(jnp.asarray(x), params))
+    approx = (idx[:, None, :] == idx[None, :, :]).mean(-1)
+    exact = rb.laplacian_kernel(x, sigma=sigma)
+    err = np.abs(approx - exact)
+    # Monte-Carlo noise ~ sqrt(k(1-k)/R) ≤ 0.011 at R=2048; hashing adds
+    # ≤ occupied/d_g ≈ small one-sided bias
+    assert err.mean() < 0.01
+    assert err.max() < 0.08
+
+
+def test_hashing_vs_exact_bins(data):
+    """Hashed ELL indices must agree with exact bin tuples up to rare
+    collisions (same bin ⇒ same hash always; different bin ⇒ same hash
+    with prob ≈ occupied/d_g)."""
+    x = data[:200]
+    params = rb.make_rb_params(jax.random.PRNGKey(4), 64, 6, sigma=2.0, d_g=4096)
+    idx = np.asarray(rb.rb_transform(jnp.asarray(x), params))
+    bins = rb.rb_bins_exact(x, params)
+    same_bin = (bins[:, None] == bins[None, :]).all(-1)      # (n, n, R)
+    same_hash = idx[:, None, :] == idx[None, :, :]
+    # no false negatives
+    assert np.all(same_hash[same_bin]), "same bin must imply same hash"
+    # false positives (hash collisions) must be rare
+    diff = ~same_bin
+    fp_rate = same_hash[diff].mean() if diff.any() else 0.0
+    assert fp_rate < 0.02
+
+
+def test_deterministic_across_calls(data):
+    p1 = rb.make_rb_params(jax.random.PRNGKey(7), 16, 6, sigma=1.0)
+    p2 = rb.make_rb_params(jax.random.PRNGKey(7), 16, 6, sigma=1.0)
+    i1 = rb.rb_transform(jnp.asarray(data), p1)
+    i2 = rb.rb_transform(jnp.asarray(data), p2)
+    assert np.array_equal(np.asarray(i1), np.asarray(i2))
+
+
+def test_suggest_d_g_scales_with_bandwidth(data):
+    small = rb.suggest_d_g(data, sigma=0.05)
+    large = rb.suggest_d_g(data, sigma=5.0)
+    assert small >= large         # narrower kernel ⇒ more occupied bins
+    assert small & (small - 1) == 0 and large & (large - 1) == 0
+
+
+def test_kappa_at_least_one(data):
+    params = rb.make_rb_params(jax.random.PRNGKey(8), 32, 6, sigma=1.0, d_g=1024)
+    idx = rb.rb_transform(jnp.asarray(data), params)
+    kappa = rb.expected_nonempty_bins(idx, 1024)
+    assert kappa >= 1.0
