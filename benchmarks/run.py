@@ -27,7 +27,7 @@ def main() -> None:
     rows = ["name,us_per_call,derived"]
 
     from benchmarks import (fig2_vary_r, fig3_solvers, fig4_scaling_n,
-                            fig5_scaling_r, table2_accuracy)
+                            fig5_scaling_r, fig6_streaming, table2_accuracy)
 
     t0 = time.time()
     t2 = table2_accuracy.run(scale=scale, rank=128 if args.quick else 256)
@@ -81,6 +81,18 @@ def main() -> None:
                      f"time_ratio_128_vs_16={slope_r:.2f}x"))
     with open("bench_results/fig5.json", "w") as f:
         json.dump(f5, f, indent=1)
+
+    t0 = time.time()
+    f6 = fig6_streaming.run(
+        ns=(1_000, 2_000, 4_000) if args.quick else (1_000, 2_000, 4_000, 8_000),
+        chunk_size=512, rank=64 if args.quick else 128)
+    dt = time.time() - t0
+    shrink = f6["ell_bytes_single_shot"][-1] / f6["ell_bytes_streaming"][-1]
+    rows.append(_row("fig6_streaming_N", dt,
+                     f"ell_peak_shrink={shrink:.1f}x;"
+                     f"agree={f6['label_agreement_at_n0']:.3f}"))
+    with open("bench_results/fig6.json", "w") as f:
+        json.dump(f6, f, indent=1)
 
     # roofline summary (if dry-run artifacts exist)
     try:

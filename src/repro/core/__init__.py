@@ -16,6 +16,11 @@ from repro.core.rb import (  # noqa: F401
 )
 from repro.core.graph import (  # noqa: F401
     NormalizedAdjacency, build_normalized_adjacency, rb_degrees,
+    rb_degrees_exact, degrees_from_counts,
+)
+from repro.core.streaming import (  # noqa: F401
+    ChunkedELL, as_row_chunks, build_chunked_adjacency, chunked_degrees,
+    chunked_rb_transform, chunked_gram_matvec,
 )
 from repro.core.eigensolver import (  # noqa: F401
     EigResult, lobpcg, lanczos, subspace_iteration, top_k_eigenpairs,

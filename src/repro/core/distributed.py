@@ -25,11 +25,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import eigensolver, rb
+from repro.core import eigensolver, rb, streaming
 from repro.core.kmeans import kmeans as _kmeans, row_normalize
 from repro.core.pipeline import SCRBConfig
 from repro.kernels import ops
-from repro.utils import StageTimer, fold_key
+from repro.utils import StageTimer, fold_key, shard_map_compat
 
 
 def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -38,7 +38,8 @@ def _data_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 def make_gram_matvec(mesh: Mesh, idx: jax.Array, rowscale: jax.Array,
                      d: int, d_g: int, impl: str = "auto",
-                     compress: bool = False):
+                     compress: bool = False,
+                     chunk_size: Optional[int] = None):
     """Row-sharded Â·u mat-vec with an explicit psum over the data axes.
 
     ``compress=True`` runs the (D, K) all-reduce payload in bf16 (halving THE
@@ -46,23 +47,38 @@ def make_gram_matvec(mesh: Mesh, idx: jax.Array, rowscale: jax.Array,
     gather stay fp32, so only the single reduction is rounded — measured
     harmless for clustering quality (tests/test_distributed.py) and the Ritz
     values converge identically at tol 1e-4 (§Perf).
+
+    ``chunk_size`` chunks *within* each row shard: the local ELL products run
+    as a ``lax.scan`` over row chunks with a single (D, K) accumulator, so
+    per-device temporary memory for the gather/scatter stays
+    O(chunk_size · R) regardless of the shard size. Composes with
+    ``compress`` — the collective is unchanged.
     """
     axes = _data_axes(mesh)
     row_spec = P(axes if len(axes) > 1 else axes[0])
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map_compat, mesh=mesh,
         in_specs=(P(row_spec[0], None), P(row_spec[0], None), row_spec),
-        out_specs=P(row_spec[0], None),
-        check_vma=False)   # kernels allocate unvarying scan carries internally
+        check_vma=False,   # kernels allocate unvarying scan carries internally
+        out_specs=P(row_spec[0], None))
     def gram(u_local, idx_local, scale_local):
-        q = ops.zt_matmul(idx_local, u_local, scale_local, d,
-                          d_g=d_g, impl=impl)          # local partial (D, K)
+        if chunk_size is None:
+            q = ops.zt_matmul(idx_local, u_local, scale_local, d,
+                              d_g=d_g, impl=impl)      # local partial (D, K)
+        else:
+            q = streaming.chunked_zt_matmul(
+                idx_local, u_local, scale_local, d=d, d_g=d_g,
+                chunk_size=chunk_size, impl=impl)
         if compress:
             q = jax.lax.psum(q.astype(jnp.bfloat16), axes).astype(jnp.float32)
         else:
             q = jax.lax.psum(q, axes)                  # THE collective
-        return ops.z_matmul(idx_local, q, scale_local, d_g=d_g, impl=impl)
+        if chunk_size is None:
+            return ops.z_matmul(idx_local, q, scale_local, d_g=d_g, impl=impl)
+        return streaming.chunked_z_matmul(
+            idx_local, q, scale_local, d_g=d_g, chunk_size=chunk_size,
+            impl=impl)
 
     return lambda u: gram(u, idx, rowscale)
 
@@ -99,7 +115,8 @@ def sc_rb_distributed(
         inv_sqrt_r = jnp.full((n,), 1.0 / np.sqrt(cfg.n_grids), jnp.float32)
         inv_sqrt_r = jax.device_put(inv_sqrt_r, scale_shard)
         with mesh:
-            deg_mv = make_gram_matvec(mesh, idx, inv_sqrt_r, d, d_g, cfg.impl)
+            deg_mv = make_gram_matvec(mesh, idx, inv_sqrt_r, d, d_g, cfg.impl,
+                                      chunk_size=cfg.chunk_size)
             deg = jax.jit(lambda: deg_mv(ones)[:, 0])()
             rowscale = 1.0 / jnp.sqrt(cfg.n_grids * jnp.maximum(deg, 1e-8))
             rowscale = jax.block_until_ready(
@@ -107,7 +124,8 @@ def sc_rb_distributed(
 
     with timer.stage("svd"):
         with mesh:
-            matvec = make_gram_matvec(mesh, idx, rowscale, d, d_g, cfg.impl)
+            matvec = make_gram_matvec(mesh, idx, rowscale, d, d_g, cfg.impl,
+                                      chunk_size=cfg.chunk_size)
             k = cfg.n_clusters
             b = k + cfg.solver_buffer
             x0 = jax.device_put(

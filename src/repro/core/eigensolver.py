@@ -61,6 +61,61 @@ def _whitened_rayleigh_ritz(s, a_s, k, rcond=3e-4):
     return theta, c
 
 
+def _lobpcg_residual_block(x, ax, tol):
+    """Ritz values, relative residuals, and the soft-locked search block W."""
+    theta = jnp.sum(x * ax, axis=0)               # Ritz values (diag XᵀAX)
+    r = ax - x * theta[None, :]
+    res = jnp.linalg.norm(r, axis=0) / jnp.maximum(theta, 1e-12)
+    active = (res > tol).astype(x.dtype)
+    w = r * active[None, :]                        # soft lock
+    # project W against X for stability, then normalize
+    w = w - x @ (x.T @ w)
+    wn = jnp.linalg.norm(w, axis=0)
+    w = w / jnp.maximum(wn, 1e-12)[None, :] * (wn > 1e-10)
+    return theta, res, w
+
+
+def _lobpcg_rr_update(x, ax, p, ap, w, aw, k):
+    """One [X|W|P] Rayleigh–Ritz step: new (X, AX, P, AP) — dense GEMMs only."""
+    s = jnp.concatenate([x, w, p], axis=1)         # (n, 3k)
+    a_s = jnp.concatenate([ax, aw, ap], axis=1)
+    _, c = _whitened_rayleigh_ritz(s, a_s, k)
+    x_new = s @ c
+    ax_new = a_s @ c
+    # float32 drift control: re-orthonormalize X by QR and keep AX
+    # consistent through the triangular factor (X = QR ⇒ AQ = AX·R⁻¹).
+    q, rfac = jnp.linalg.qr(x_new)
+    rdiag = jnp.abs(jnp.diagonal(rfac))
+    safe = rdiag > 1e-6 * jnp.max(rdiag)
+    ax_q = jax.scipy.linalg.solve_triangular(
+        rfac.T, ax_new.T, lower=True).T
+    x_new = jnp.where(safe[None, :], q, x_new)
+    ax_new = jnp.where(safe[None, :], ax_q, ax_new)
+    # implicit P: the W/P component of the update direction
+    c_p = c.at[:k, :].set(0.0)
+    p_new = s @ c_p
+    ap_new = a_s @ c_p
+    pn = jnp.linalg.norm(p_new, axis=0)
+    pscale = jnp.where(pn > 1e-10, 1.0 / jnp.maximum(pn, 1e-12), 0.0)
+    p_new = p_new * pscale[None, :]
+    ap_new = ap_new * pscale[None, :]
+    return x_new, ax_new, p_new, ap_new
+
+
+# module-level jitted variants so repeated lobpcg_host calls at the same
+# shapes hit the session jit cache instead of re-tracing per invocation
+_lobpcg_residual_block_jit = jax.jit(_lobpcg_residual_block)
+_lobpcg_rr_update_jit = jax.jit(_lobpcg_rr_update, static_argnames=("k",))
+
+
+def _lobpcg_finalize(x, ax, it):
+    theta = jnp.sum(x * ax, axis=0)
+    order = jnp.argsort(-theta)
+    r = ax - x * theta[None, :]
+    res_final = jnp.linalg.norm(r, axis=0) / jnp.maximum(theta, 1e-12)
+    return EigResult(theta[order], x[:, order], res_final[order], it)
+
+
 def lobpcg(
     matvec: Matvec,
     x0: jax.Array,
@@ -82,42 +137,12 @@ def lobpcg(
 
     def body(state):
         x, ax, p, ap, _, it = state
-        theta = jnp.sum(x * ax, axis=0)               # Ritz values (diag XᵀAX)
-        r = ax - x * theta[None, :]
-        res = jnp.linalg.norm(r, axis=0) / jnp.maximum(theta, 1e-12)
-        active = (res > tol).astype(x.dtype)
-        w = r * active[None, :]                        # soft lock
-        # project W against X for stability, then normalize
-        w = w - x @ (x.T @ w)
-        wn = jnp.linalg.norm(w, axis=0)
-        w = w / jnp.maximum(wn, 1e-12)[None, :] * (wn > 1e-10)
+        theta, res, w = _lobpcg_residual_block(x, ax, tol)
         aw = matvec(w)
-
-        s = jnp.concatenate([x, w, p], axis=1)         # (n, 3k)
-        a_s = jnp.concatenate([ax, aw, ap], axis=1)
-        _, c = _whitened_rayleigh_ritz(s, a_s, k)
-        x_new = s @ c
-        ax_new = a_s @ c
-        # float32 drift control: re-orthonormalize X by QR and keep AX
-        # consistent through the triangular factor (X = QR ⇒ AQ = AX·R⁻¹).
-        q, rfac = jnp.linalg.qr(x_new)
-        rdiag = jnp.abs(jnp.diagonal(rfac))
-        safe = rdiag > 1e-6 * jnp.max(rdiag)
-        ax_q = jax.scipy.linalg.solve_triangular(
-            rfac.T, ax_new.T, lower=True).T
-        x_new = jnp.where(safe[None, :], q, x_new)
-        ax_new = jnp.where(safe[None, :], ax_q, ax_new)
+        x_new, ax_new, p_new, ap_new = _lobpcg_rr_update(x, ax, p, ap, w, aw, k)
         # periodic exact refresh of AX kills residual recombination drift
         ax_new = jax.lax.cond(
             (it + 1) % 16 == 0, lambda: matvec(x_new), lambda: ax_new)
-        # implicit P: the W/P component of the update direction
-        c_p = c.at[:k, :].set(0.0)
-        p_new = s @ c_p
-        ap_new = a_s @ c_p
-        pn = jnp.linalg.norm(p_new, axis=0)
-        pscale = jnp.where(pn > 1e-10, 1.0 / jnp.maximum(pn, 1e-12), 0.0)
-        p_new = p_new * pscale[None, :]
-        ap_new = ap_new * pscale[None, :]
         return x_new, ax_new, p_new, ap_new, res, it + 1
 
     p0 = jnp.zeros_like(x)
@@ -125,11 +150,46 @@ def lobpcg(
     x, ax, _, _, res, it = jax.lax.while_loop(
         cond, body, (x, ax, p0, jnp.zeros_like(x), res0, jnp.int32(0))
     )
-    theta = jnp.sum(x * ax, axis=0)
-    order = jnp.argsort(-theta)
-    r = ax - x * theta[None, :]
-    res_final = jnp.linalg.norm(r, axis=0) / jnp.maximum(theta, 1e-12)
-    return EigResult(theta[order], x[:, order], res_final[order], it)
+    return _lobpcg_finalize(x, ax, it)
+
+
+def lobpcg_host(
+    matvec: Matvec,
+    x0: jax.Array,
+    *,
+    max_iters: int = 200,
+    tol: float = 1e-5,
+) -> EigResult:
+    """LOBPCG driven by a host-side Python loop instead of ``lax.while_loop``.
+
+    Same math as ``lobpcg`` (shared residual/Rayleigh–Ritz helpers), but
+    ``matvec`` is called *eagerly* — it may stream over host-resident row
+    chunks (``streaming.ChunkedELL.gram_matvec``) so the device only ever
+    holds one chunk of Z. Tracing such a mat-vec into ``while_loop`` would
+    embed every chunk as an on-device constant, defeating the point. The
+    dense block algebra between mat-vecs is jitted once per shape.
+    """
+    n, k = x0.shape
+    if 3 * k > n:
+        raise ValueError(f"block too large: need 3k ≤ n, got k={k}, n={n}")
+    prepare = _lobpcg_residual_block_jit
+    update = functools.partial(_lobpcg_rr_update_jit, k=k)
+
+    x = _orthonormalize(jnp.asarray(x0, jnp.float32))
+    ax = jnp.asarray(matvec(x))
+    p = jnp.zeros_like(x)
+    ap = jnp.zeros_like(x)
+    it = 0
+    while it < max_iters:
+        theta, res, w = prepare(x, ax, tol)
+        if float(jnp.max(res)) <= tol:
+            break
+        aw = jnp.asarray(matvec(w))
+        x, ax, p, ap = update(x, ax, p, ap, w, aw)
+        it += 1
+        if it % 16 == 0:
+            ax = jnp.asarray(matvec(x))
+    return _lobpcg_finalize(x, ax, jnp.int32(it))
 
 
 def lanczos(
@@ -228,6 +288,7 @@ def subspace_iteration(
 
 SOLVERS = {
     "lobpcg": lobpcg,
+    "lobpcg_host": lobpcg_host,
     "lanczos": lanczos,
     "subspace": subspace_iteration,
 }
@@ -243,17 +304,29 @@ def top_k_eigenpairs(
     max_iters: int = 200,
     tol: float = 1e-5,
     buffer: int = 4,
+    streaming: bool = False,
 ) -> EigResult:
     """Solve for the top-k eigenpairs with a small convergence buffer block.
 
     The buffer (extra Ritz pairs) accelerates convergence when the k-th and
     (k+1)-th eigenvalues are clustered — the covtype regime in the paper's
     Fig. 3 discussion.
+
+    ``streaming=True`` marks ``matvec`` as eager-only (it streams host
+    chunks), so the iteration must be driven from the host; only the
+    LOBPCG solver has a host driver.
     """
     b = min(k + buffer, max(k, n // 3))
     x0 = jax.random.normal(key, (n, b), jnp.float32)
-    if solver == "lobpcg":
+    if streaming:
+        if solver not in ("lobpcg", "lobpcg_host"):
+            raise ValueError(
+                f"streaming mat-vecs require solver='lobpcg', got {solver!r}")
+        out = lobpcg_host(matvec, x0, max_iters=max_iters, tol=tol)
+    elif solver == "lobpcg":
         out = lobpcg(matvec, x0, max_iters=max_iters, tol=tol)
+    elif solver == "lobpcg_host":
+        out = lobpcg_host(matvec, x0, max_iters=max_iters, tol=tol)
     elif solver == "subspace":
         out = subspace_iteration(matvec, x0, max_iters=max_iters, tol=tol)
     elif solver == "lanczos":

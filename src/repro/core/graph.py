@@ -27,6 +27,28 @@ def rb_degrees(idx: jax.Array, *, d: int, d_g: int, impl: str = "auto") -> jax.A
     return deg[:, 0]
 
 
+@jax.jit
+def degrees_from_counts(idx: jax.Array, counts: jax.Array) -> jax.Array:
+    """deg_i = (1/R) Σ_g counts[idx[i,g]] from exact int32 bin occupancies.
+
+    Row-local, so the result for a given row is identical no matter how the
+    rows are chunked — the invariant the streaming degree pass relies on.
+    """
+    r = idx.shape[1]
+    return jnp.sum(jnp.take(counts, idx).astype(jnp.float32), axis=1) / r
+
+
+def rb_degrees_exact(idx: jax.Array, *, d: int, d_g: int,
+                     impl: str = "auto") -> jax.Array:
+    """Eq. 6 degrees via integer bin counts (chunk-order invariant).
+
+    Agrees with ``rb_degrees`` to fp32 rounding; preferred by the streaming
+    path where bit-identical chunked/unchunked degrees are required.
+    """
+    counts = ops.bin_counts(idx, d=d, d_g=d_g, impl=impl)
+    return degrees_from_counts(idx, counts)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class NormalizedAdjacency:

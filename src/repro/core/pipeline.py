@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import eigensolver, graph, rb
+from repro.core import eigensolver, graph, rb, streaming
 from repro.core.kmeans import kmeans as _kmeans, row_normalize
 from repro.utils import StageTimer, fold_key
 
@@ -38,6 +38,11 @@ class SCRBConfig:
     kmeans_replicates: int = 10
     seed: int = 0
     impl: str = "auto"            # kernel dispatch: auto | pallas | xla
+    chunk_size: Optional[int] = None
+    # ^ rows of Z resident on device at once. None → single-shot path
+    #   (bit-identical to the pre-streaming pipeline); an int bounds peak
+    #   device residency of the ELL matrix to O(chunk_size · R) and streams
+    #   host-resident chunks through every stage (requires solver="lobpcg").
 
 
 @dataclasses.dataclass
@@ -49,8 +54,87 @@ class SCRBResult:
     diagnostics: dict
 
 
+def _streaming_adjacency(x, cfg: SCRBConfig, key, timer: StageTimer):
+    """Stages 1–2 of the streaming pipeline: chunked Alg. 1 + Eq. 6.
+
+    ``x`` may be an array or an already-chunked sequence of row blocks
+    (e.g. memory-mapped); nothing larger than one chunk reaches the device.
+    """
+    x_chunks = streaming.as_row_chunks(x, cfg.chunk_size)
+    dim = x_chunks[0].shape[1]
+    with timer.stage("rb_features"):
+        d_g = cfg.d_g or rb.suggest_d_g(x_chunks, cfg.sigma,
+                                        key=fold_key(key, "probe"))
+        params = rb.make_rb_params(
+            fold_key(key, "rb"), cfg.n_grids, dim, cfg.sigma, d_g)
+        idx_chunks = streaming.chunked_rb_transform(x_chunks, params,
+                                                    impl=cfg.impl)
+    with timer.stage("degrees"):
+        adj = streaming.build_chunked_adjacency(
+            idx_chunks, d=params.n_features, d_g=d_g, impl=cfg.impl)
+    return adj, params
+
+
+def _sc_rb_streaming(x, cfg: SCRBConfig) -> SCRBResult:
+    """Algorithm 2 with O(chunk_size · R) peak ELL device residency."""
+    if cfg.solver not in ("lobpcg", "lobpcg_host"):
+        raise ValueError(
+            f"chunk_size streaming requires solver='lobpcg' (host-driven "
+            f"iteration), got {cfg.solver!r}")
+    key = jax.random.PRNGKey(cfg.seed)
+    timer = StageTimer()
+    k = cfg.n_clusters
+
+    adj, params = _streaming_adjacency(x, cfg, key, timer)
+    n = adj.n
+
+    with timer.stage("svd"):
+        eig = eigensolver.top_k_eigenpairs(
+            adj.gram_matvec, n, k, fold_key(key, "eig"),
+            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+            buffer=cfg.solver_buffer, streaming=True,
+        )
+        u = jax.block_until_ready(eig.vectors)
+
+    with timer.stage("kmeans"):
+        u_hat = row_normalize(u)
+        res = _kmeans(
+            fold_key(key, "kmeans"), u_hat, k,
+            n_iters=cfg.kmeans_iters, n_replicates=cfg.kmeans_replicates,
+            impl=cfg.impl,
+        )
+        labels = jax.block_until_ready(res.labels)
+
+    sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
+    diagnostics = {
+        "solver_iterations": int(eig.iterations),
+        "solver_resnorms": np.asarray(eig.resnorms),
+        "degrees_min": float(np.min(adj.deg)),
+        "degrees_max": float(np.max(adj.deg)),
+        "kmeans_inertia": float(res.inertia),
+        "n_features_D": params.n_features,
+        "nnz": n * cfg.n_grids,
+        "n_chunks": adj.n_chunks,
+        "chunk_rows_max": adj.max_chunk_rows,
+        "ell_device_bytes_peak": adj.ell_device_bytes_peak,
+    }
+    return SCRBResult(
+        labels=np.asarray(labels),
+        embedding=np.asarray(u_hat),
+        singular_values=sigmas,
+        timer=timer,
+        diagnostics=diagnostics,
+    )
+
+
 def sc_rb(x: jax.Array, config: SCRBConfig) -> SCRBResult:
-    """Run Algorithm 2 on a single host/device."""
+    """Run Algorithm 2 on a single host/device.
+
+    With ``config.chunk_size`` set, the ELL matrix is streamed in row chunks
+    (see ``repro.core.streaming``) — same algorithm, bounded device memory.
+    """
+    if config.chunk_size is not None:
+        return _sc_rb_streaming(x, config)
     cfg = config
     key = jax.random.PRNGKey(cfg.seed)
     timer = StageTimer()
@@ -115,9 +199,18 @@ def spectral_embed(
 
     Exposed for framework integration (e.g. clustering LM representations
     where a downstream consumer wants the embedding, not the labels).
+    Honors ``config.chunk_size`` like ``sc_rb``.
     """
     cfg = config
     key = jax.random.PRNGKey(cfg.seed)
+    if cfg.chunk_size is not None:
+        adj, _ = _streaming_adjacency(x, cfg, key, StageTimer())
+        eig = eigensolver.top_k_eigenpairs(
+            adj.gram_matvec, adj.n, cfg.n_clusters, fold_key(key, "eig"),
+            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+            buffer=cfg.solver_buffer, streaming=True,
+        )
+        return row_normalize(eig.vectors), jnp.sqrt(jnp.maximum(eig.theta, 0.0))
     n, d = x.shape
     d_g = cfg.d_g or rb.suggest_d_g(x, cfg.sigma, key=fold_key(key, "probe"))
     params = rb.make_rb_params(fold_key(key, "rb"), cfg.n_grids, d, cfg.sigma, d_g)

@@ -15,7 +15,7 @@ matrix ``idx int32 (N, R)`` — exactly the paper's O(NR) memory, static shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -121,8 +121,40 @@ def gaussian_kernel(x: np.ndarray, y: Optional[np.ndarray] = None, *, sigma: flo
     return np.exp(-sq / (2.0 * sigma**2))
 
 
+def _gather_sample(
+    x: "jax.Array | np.ndarray | Sequence[np.ndarray]",
+    n_sample: int,
+    seed: int,
+) -> np.ndarray:
+    """Uniform row subsample that also accepts chunked (streaming) inputs.
+
+    For a sequence of row chunks, rows are gathered by global index without
+    concatenating the full dataset — the selection (and order) is identical
+    to indexing the equivalent dense array, so chunked and dense inputs give
+    bit-identical downstream suggestions.
+    """
+    if isinstance(x, (list, tuple)):
+        sizes = [int(c.shape[0]) for c in x]
+        total = sum(sizes)
+        if total <= n_sample:
+            return np.concatenate([np.asarray(c) for c in x])
+        bounds = np.cumsum([0] + sizes)
+        sel = np.random.default_rng(seed).choice(total, n_sample, replace=False)
+        rows = []
+        for i in sel:
+            c = int(np.searchsorted(bounds, i, side="right")) - 1
+            rows.append(np.asarray(x[c][i - bounds[c]]))
+        return np.stack(rows)
+    xs = np.asarray(x)
+    if xs.shape[0] > n_sample:
+        sel = np.random.default_rng(seed).choice(xs.shape[0], n_sample,
+                                                 replace=False)
+        xs = xs[sel]
+    return xs
+
+
 def suggest_d_g(
-    x: jax.Array | np.ndarray,
+    x: "jax.Array | np.ndarray | Sequence[np.ndarray]",
     sigma: float,
     *,
     key: jax.Array | None = None,
@@ -141,10 +173,7 @@ def suggest_d_g(
     the next power of two ≥ headroom × P90(count).
     """
     key = jax.random.PRNGKey(0) if key is None else key
-    xs = np.asarray(x)
-    if xs.shape[0] > n_sample:
-        sel = np.random.default_rng(0).choice(xs.shape[0], n_sample, replace=False)
-        xs = xs[sel]
+    xs = _gather_sample(x, n_sample, seed=0)
     probe = make_rb_params(key, n_probe_grids, xs.shape[1], sigma, d_g=min_d_g)
     bins = rb_bins_exact(xs, probe)                       # (n, G, d)
     counts = []
@@ -157,17 +186,15 @@ def suggest_d_g(
     return int(min(max(d_g, min_d_g), max_d_g))
 
 
-def suggest_sigma(x: jax.Array | np.ndarray, *, n_sample: int = 512,
-                  scale: float = 0.5, seed: int = 0) -> float:
+def suggest_sigma(x: "jax.Array | np.ndarray | Sequence[np.ndarray]", *,
+                  n_sample: int = 512, scale: float = 0.5,
+                  seed: int = 0) -> float:
     """Median-heuristic bandwidth for the Laplacian kernel:
     σ = scale · median‖x_i − x_j‖₁ over a subsample. The paper tunes σ by
     cross-validation in [0.01, 100]; this is the standard zero-knowledge
-    starting point (used by the embed-clustering example)."""
-    xs = np.asarray(x)
-    if xs.shape[0] > n_sample:
-        sel = np.random.default_rng(seed).choice(xs.shape[0], n_sample,
-                                                 replace=False)
-        xs = xs[sel]
+    starting point (used by the embed-clustering example). Accepts chunked
+    (streaming) inputs like ``suggest_d_g``."""
+    xs = _gather_sample(x, n_sample, seed)
     d1 = np.abs(xs[:, None, :] - xs[None, :, :]).sum(-1)
     iu = np.triu_indices(xs.shape[0], k=1)
     return float(np.median(d1[iu]) * scale)

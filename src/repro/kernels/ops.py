@@ -116,6 +116,42 @@ def _largest_divisor_pow2_cap(n: int, cap: int) -> int:
 
 
 # --------------------------------------------------------------------------
+# ELL bin counts: m = Zᵀ·1 as exact int32 occupancies
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("d",))
+def _bin_counts_xla(idx, *, d):
+    return jnp.zeros((d,), jnp.int32).at[idx.reshape(-1)].add(1)
+
+
+def bin_counts(idx: jax.Array, *, d: int, d_g: int, impl: str = "auto") -> jax.Array:
+    """Per-column occupancy of the ELL pattern: int32 (D,).
+
+    Integer accumulation is order-invariant, so summing per-chunk counts in
+    the streaming degree pass is bit-identical to the single-shot result —
+    the property tests/test_streaming.py pins down.
+    """
+    impl = _resolve(impl)
+    if impl == "xla":
+        return _bin_counts_xla(idx, d=d)
+    # Pallas route: reuse the zt kernel with unit weights. float32 holds the
+    # counts exactly below 2^24, so accumulate in row slices of < 2^22 rows
+    # (per-bin occupancy within a slice is bounded by the slice height) and
+    # sum the slices in exact int32.
+    n = idx.shape[0]
+    slice_rows = 1 << 22
+    total = jnp.zeros((d,), jnp.int32)
+    for start in range(0, n, slice_rows):
+        part = idx[start:start + slice_rows]
+        m = part.shape[0]
+        ones = jnp.ones((m, 1), jnp.float32)
+        unit = jnp.ones((m,), jnp.float32)
+        counts = zt_matmul(part, ones, unit, d, d_g=d_g, impl="pallas")
+        total = total + jnp.round(counts[:, 0]).astype(jnp.int32)
+    return total
+
+
+# --------------------------------------------------------------------------
 # ELL spmm: y = diag(s)·Z·v   and   q = Zᵀ·diag(s)·u
 # --------------------------------------------------------------------------
 

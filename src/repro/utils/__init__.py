@@ -76,3 +76,26 @@ def asdict_shallow(obj: Any) -> Dict[str, Any]:
     if dataclasses.is_dataclass(obj):
         return {f.name: getattr(obj, f.name) for f in dataclasses.fields(obj)}
     raise TypeError(f"not a dataclass: {obj!r}")
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``jax.shard_map`` across jax versions.
+
+    jax ≥ 0.6 exposes ``jax.shard_map(..., check_vma=)``; older releases have
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)`` (same flag,
+    renamed). Keeping the shim here lets the distributed layer run on both.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def make_mesh_compat(shape, axes) -> "jax.sharding.Mesh":
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,27 @@
+"""Test-tier configuration: fast by default, opt into the slow tier.
+
+Tier-1 (`PYTHONPATH=src python -m pytest -x -q`) must stay green and finish
+in well under a minute on CPU, so long-running pipeline/theory/distributed
+cases are marked ``slow`` and deselected unless ``--runslow`` is given.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked slow (multi-minute pipeline/theory cases)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: long-running case, deselected unless --runslow")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow tier: pass --runslow to run")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

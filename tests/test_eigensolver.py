@@ -14,7 +14,10 @@ def _random_psd(key, n, decay=0.9):
     return (q * lam[None, :]) @ q.T, np.asarray(lam)
 
 
-@pytest.mark.parametrize("n,k", [(60, 4), (120, 8)])
+@pytest.mark.parametrize("n,k", [
+    (60, 4),
+    pytest.param(120, 8, marks=pytest.mark.slow),
+])
 def test_lobpcg_matches_dense(n, k):
     a, lam = _random_psd(jax.random.PRNGKey(n), n)
     res = eigensolver.lobpcg(
@@ -42,6 +45,24 @@ def test_lobpcg_clustered_spectrum():
                                np.asarray(lam)[:4], atol=1e-4)
 
 
+def test_lobpcg_host_matches_traced():
+    """The host-driven LOBPCG (streaming path: eager mat-vec, Python loop)
+    runs the same math as the lax.while_loop version — same eigenpairs to
+    solver tolerance from the same start block."""
+    n, k = 90, 5
+    a, lam = _random_psd(jax.random.PRNGKey(3), n)
+    x0 = jax.random.normal(jax.random.PRNGKey(4), (n, k))
+    mv = lambda u: a @ u
+    traced = eigensolver.lobpcg(mv, x0, max_iters=400, tol=1e-7)
+    host = eigensolver.lobpcg_host(mv, x0, max_iters=400, tol=1e-7)
+    np.testing.assert_allclose(np.asarray(host.theta), lam[:k],
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(host.theta),
+                               np.asarray(traced.theta), atol=1e-5)
+    assert float(np.max(np.asarray(host.resnorms))) < 1e-3
+
+
+@pytest.mark.slow
 def test_lobpcg_stability_no_blowup():
     """Regression: float32 whitening must not amplify noise directions
     (observed 1e15 blow-up before rcond/QR hardening)."""

@@ -18,6 +18,7 @@ from repro.train.optimizer import OptConfig
 from repro.train.trainer import TrainConfig, Trainer
 
 
+@pytest.mark.slow
 def test_sigterm_checkpoints_and_stops(tmp_path):
     """The cloud preemption contract: SIGTERM ⇒ save state, exit the loop."""
     cfg = smoke_config("internlm2-1.8b")
@@ -48,10 +49,9 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import checkpoint as ckpt
 
-mesh_a = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
-mesh_b = jax.make_mesh((8,), ("data",),
-                       axis_types=(jax.sharding.AxisType.Auto,))
+from repro.utils import make_mesh_compat
+mesh_a = make_mesh_compat((2, 4), ("data", "model"))
+mesh_b = make_mesh_compat((8,), ("data",))
 
 tree = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.arange(8.0)}
 sharded = {

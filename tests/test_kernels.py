@@ -23,8 +23,8 @@ def _rb_inputs(key, n, d, r, d_g):
 @pytest.mark.parametrize("n,d,r,d_g", [
     (64, 2, 8, 64),
     (100, 3, 16, 128),     # n not divisible by tile
-    (256, 7, 4, 256),
-    (513, 16, 32, 512),    # odd n, wide d
+    pytest.param(256, 7, 4, 256, marks=pytest.mark.slow),
+    pytest.param(513, 16, 32, 512, marks=pytest.mark.slow),  # odd n, wide d
 ])
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
 def test_rb_binning_matches_ref(n, d, r, d_g, impl):
@@ -38,8 +38,9 @@ def test_rb_binning_matches_ref(n, d, r, d_g, impl):
 @pytest.mark.parametrize("n,r,d_g,k", [
     (64, 4, 64, 8),
     (100, 8, 128, 3),      # ragged n
-    (256, 16, 64, 32),
-    (300, 12, 256, 5),     # r not divisible by block_r=4 -> falls to divisor
+    pytest.param(256, 16, 64, 32, marks=pytest.mark.slow),
+    # r not divisible by block_r=4 -> falls to divisor
+    pytest.param(300, 12, 256, 5, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
@@ -61,7 +62,7 @@ def test_z_matmul_matches_ref(n, r, d_g, k, impl, dtype):
 @pytest.mark.parametrize("n,r,d_g,k", [
     (64, 4, 64, 8),
     (100, 8, 128, 3),
-    (256, 16, 64, 32),
+    pytest.param(256, 16, 64, 32, marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
 def test_zt_matmul_matches_ref(n, r, d_g, k, impl):
@@ -75,6 +76,77 @@ def test_zt_matmul_matches_ref(n, r, d_g, k, impl):
     want = ref.zt_matmul_ref(idx, u, s, d)
     got = ops.zt_matmul(idx, u, s, d, d_g=d_g, impl=impl)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,r,d_g", [
+    (64, 4, 64),
+    (101, 8, 2),           # non-divisible N, minimal d_g
+    (100, 8, 1024),        # ragged N, wide d_g
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas", "auto"])
+def test_bin_counts_matches_exact(n, r, d_g, impl):
+    """Exact int32 occupancies on every dispatch path (auto falls back to
+    xla on CPU CI; pallas runs in interpret mode)."""
+    key = jax.random.PRNGKey(n + r)
+    d = r * d_g
+    idx = (
+        jax.random.randint(key, (n, r), 0, d_g)
+        + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    want = np.bincount(np.asarray(idx).reshape(-1), minlength=d)
+    got = ops.bin_counts(idx, d=d, d_g=d_g, impl=impl)
+    assert got.dtype == jnp.int32
+    assert np.array_equal(np.asarray(got), want)
+
+
+@pytest.mark.parametrize("n,r,d_g,k,chunk", [
+    (101, 8, 2, 3, 32),    # non-divisible N, minimal d_g, ragged chunks
+    (100, 4, 128, 5, 64),  # ragged last chunk
+    pytest.param(256, 8, 512, 4, 256,  # single chunk == whole matrix
+                 marks=pytest.mark.slow),
+    (130, 4, 64, 2, 7),    # many tiny ragged chunks
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas", "auto"])
+def test_chunked_matvecs_impl_parity(n, r, d_g, k, chunk, impl):
+    """The traceable chunked products match the references through every
+    dispatch path, so streaming + impl="auto" fallback is covered on CPU."""
+    from repro.core import streaming
+    key = jax.random.PRNGKey(n * r + chunk)
+    d = r * d_g
+    idx = (
+        jax.random.randint(key, (n, r), 0, d_g)
+        + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    s = jax.random.uniform(jax.random.PRNGKey(1), (n,), jnp.float32) + 0.5
+    u = jax.random.normal(jax.random.PRNGKey(2), (n, k), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(3), (d, k), jnp.float32)
+    want_q = ref.zt_matmul_ref(idx, u, s, d)
+    got_q = streaming.chunked_zt_matmul(idx, u, s, d=d, d_g=d_g,
+                                        chunk_size=chunk, impl=impl)
+    np.testing.assert_allclose(np.asarray(got_q), np.asarray(want_q),
+                               rtol=3e-5, atol=3e-5)
+    want_y = ref.z_matmul_ref(idx, v, s)
+    got_y = streaming.chunked_z_matmul(idx, v, s, d_g=d_g,
+                                       chunk_size=chunk, impl=impl)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_chunked_ell_host_path_impl_parity(impl):
+    """The host-streaming ChunkedELL gram mat-vec agrees across kernel
+    dispatch paths (pallas interpret vs xla) on a ragged chunking."""
+    from repro.core import streaming
+    n, r, d_g, k = 120, 4, 128, 3
+    d = r * d_g
+    idx = (
+        jax.random.randint(jax.random.PRNGKey(9), (n, r), 0, d_g)
+        + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    s = jax.random.uniform(jax.random.PRNGKey(10), (n,), jnp.float32) + 0.5
+    u = jax.random.normal(jax.random.PRNGKey(11), (n, k), jnp.float32)
+    chunked = streaming.ChunkedELL.from_dense(
+        np.asarray(idx), np.asarray(s), 50, d=d, d_g=d_g, impl=impl)
+    want = ref.z_matmul_ref(idx, ref.zt_matmul_ref(idx, u, s, d), s)
+    np.testing.assert_allclose(np.asarray(chunked.gram_matvec(u)),
+                               np.asarray(want), rtol=3e-5, atol=3e-5)
 
 
 def test_zt_z_adjoint():
@@ -95,7 +167,11 @@ def test_zt_z_adjoint():
     assert abs(lhs - rhs) < 1e-2 * max(abs(lhs), 1.0)
 
 
-@pytest.mark.parametrize("n,d,k", [(64, 2, 3), (1000, 8, 16), (1025, 16, 7)])
+@pytest.mark.parametrize("n,d,k", [
+    (64, 2, 3),
+    pytest.param(1000, 8, 16, marks=pytest.mark.slow),
+    pytest.param(1025, 16, 7, marks=pytest.mark.slow),
+])
 @pytest.mark.parametrize("impl", ["xla", "pallas"])
 def test_kmeans_assign_matches_ref(n, d, k, impl):
     x = jax.random.normal(jax.random.PRNGKey(n), (n, d), jnp.float32)
@@ -108,9 +184,10 @@ def test_kmeans_assign_matches_ref(n, d, k, impl):
 
 @pytest.mark.parametrize("s,t,hd,causal,window", [
     (64, 64, 16, True, None),
-    (128, 128, 32, True, None),
+    pytest.param(128, 128, 32, True, None, marks=pytest.mark.slow),
     (64, 64, 16, True, 24),       # sliding window
-    (128, 128, 16, False, None),  # bidirectional
+    pytest.param(128, 128, 16, False, None,  # bidirectional
+                 marks=pytest.mark.slow),
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_flash_attention_matches_ref(s, t, hd, causal, window, dtype):

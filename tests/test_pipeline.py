@@ -15,6 +15,26 @@ def rings():
     return make_rings(1200, 2, seed=0)
 
 
+def test_scrb_smoke_fast():
+    """Fast-tier pipeline smoke: non-convex rings at reduced scale, with
+    per-stage timings and deterministic output. The full-scale qualitative
+    claims (vs exact SC, convergence in R, ...) run under --runslow.
+
+    Deliberately the same (N, R, d_g) as tests/test_streaming's end-to-end
+    case so the jitted stages compile once per pytest session.
+    """
+    x, y = make_rings(600, 2, seed=0)
+    cfg = SCRBConfig(n_clusters=2, n_grids=96, sigma=0.15, d_g=4096,
+                     solver_tol=1e-3, kmeans_replicates=2, seed=7)
+    res = sc_rb(jnp.asarray(x), cfg)
+    assert metrics.accuracy(res.labels, y) > 0.95
+    for stage in ["rb_features", "degrees", "svd", "kmeans"]:
+        assert stage in res.timer.times and res.timer.times[stage] > 0
+    res2 = sc_rb(jnp.asarray(x), cfg)
+    assert np.array_equal(res.labels, res2.labels)
+
+
+@pytest.mark.slow
 def test_scrb_recovers_rings(rings):
     """Non-convex geometry: k-means fails, SC_RB succeeds (paper §1)."""
     x, y = rings
@@ -27,6 +47,7 @@ def test_scrb_recovers_rings(rings):
     assert metrics.accuracy(km.labels, y) < 0.8
 
 
+@pytest.mark.slow
 def test_scrb_matches_exact_sc(rings):
     """Alg. 2 converges to exact SC accuracy at moderate R (Thm 2)."""
     x, y = rings
@@ -39,6 +60,7 @@ def test_scrb_matches_exact_sc(rings):
     assert metrics.accuracy(res.labels, y) >= acc_exact - 0.03
 
 
+@pytest.mark.slow
 def test_convergence_in_R(rings):
     """Accuracy is non-degrading as R grows (Fig. 2a trend)."""
     x, y = rings
@@ -52,6 +74,7 @@ def test_convergence_in_R(rings):
     assert accs[-1] > 0.95
 
 
+@pytest.mark.slow
 def test_blobs_high_dim():
     x, y = make_blobs(1500, 16, 8, seed=1)
     res = sc_rb(jnp.asarray(x), SCRBConfig(
@@ -59,6 +82,7 @@ def test_blobs_high_dim():
     assert metrics.accuracy(res.labels, y) > 0.9
 
 
+@pytest.mark.slow
 def test_embedding_properties(rings):
     x, _ = rings
     u, sv = spectral_embed(jnp.asarray(x), SCRBConfig(
@@ -73,6 +97,7 @@ def test_embedding_properties(rings):
     assert np.all(svn[:-1] >= svn[1:] - 1e-5)       # descending
 
 
+@pytest.mark.slow
 def test_stage_timings_reported(rings):
     x, _ = rings
     res = sc_rb(jnp.asarray(x), SCRBConfig(
@@ -81,6 +106,7 @@ def test_stage_timings_reported(rings):
         assert stage in res.timer.times and res.timer.times[stage] > 0
 
 
+@pytest.mark.slow
 def test_deterministic_given_seed(rings):
     x, _ = rings
     cfg = SCRBConfig(n_clusters=2, n_grids=64, sigma=0.2,
@@ -90,6 +116,7 @@ def test_deterministic_given_seed(rings):
     assert np.array_equal(r1.labels, r2.labels)
 
 
+@pytest.mark.slow
 def test_moons():
     x, y = make_moons(1200, seed=2)
     res = sc_rb(jnp.asarray(x), SCRBConfig(
@@ -97,6 +124,7 @@ def test_moons():
     assert metrics.accuracy(res.labels, y) > 0.9
 
 
+@pytest.mark.slow
 def test_minibatch_kmeans_quality():
     """Mini-batch k-means (the N ≫ 10⁷ path) lands near full Lloyd quality."""
     import jax

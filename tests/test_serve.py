@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import smoke_config
 from repro.models import transformer as T
@@ -22,6 +23,7 @@ def test_greedy_sampling_is_argmax():
     assert out.tolist() == [1, 2]
 
 
+@pytest.mark.slow
 def test_generate_shapes_and_determinism():
     cfg = _tiny()
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -36,6 +38,7 @@ def test_generate_shapes_and_determinism():
     assert out1.max() < cfg.vocab_size
 
 
+@pytest.mark.slow
 def test_generate_matches_stepwise_teacher_forcing():
     """Greedy engine output == manual prefill+decode loop."""
     cfg = _tiny()

@@ -1,0 +1,175 @@
+"""Parity tests for the chunked/streaming execution subsystem.
+
+The streaming pipeline must compute the paper's exact algorithm: degrees are
+bit-identical under any chunking (integer-count two-pass), the blocked Gram
+mat-vec matches the single-shot operator to fp32 tolerance, and end-to-end
+labels match the unchunked run up to permutation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SCRBConfig, graph, metrics, rb, sc_rb, spectral_embed, streaming,
+)
+from repro.data.synthetic import make_rings
+
+
+@pytest.fixture(scope="module")
+def ell():
+    """A realistic ELL matrix from RB features of ring data."""
+    x, _ = make_rings(500, 2, seed=0)
+    params = rb.make_rb_params(jax.random.PRNGKey(0), 24, 2, 0.15, d_g=1024)
+    idx = np.asarray(rb.rb_transform(jnp.asarray(x), params))
+    return idx, params.n_features, params.d_g
+
+
+@pytest.mark.parametrize("chunk_size", [64, 100, 128, 500])
+def test_chunked_degrees_exactly_match_single_shot(ell, chunk_size):
+    """(a) Integer-count accumulation is order-invariant ⇒ degrees are
+    bit-identical for every chunking, ragged last chunks included."""
+    idx, d, d_g = ell
+    single = streaming.chunked_degrees([idx], d=d, d_g=d_g)
+    chunks = [idx[i:i + chunk_size] for i in range(0, idx.shape[0], chunk_size)]
+    chunked = streaming.chunked_degrees(chunks, d=d, d_g=d_g)
+    assert np.array_equal(single, chunked)
+
+
+def test_exact_degrees_agree_with_float_path(ell):
+    """The integer-count degrees agree with the two-mat-vec float path
+    (graph.rb_degrees) to fp32 rounding."""
+    idx, d, d_g = ell
+    want = np.asarray(graph.rb_degrees(jnp.asarray(idx), d=d, d_g=d_g))
+    got = np.asarray(graph.rb_degrees_exact(jnp.asarray(idx), d=d, d_g=d_g))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("chunk_size", [32, 77, 128, 499, 500])
+def test_chunked_gram_matvec_matches_single_shot(ell, chunk_size):
+    """(b) The blocked u ↦ Ẑ(Ẑᵀu) matches the dense operator to fp32
+    tolerance for divisible, ragged, near-full, and full chunk sizes."""
+    idx, d, d_g = ell
+    adj = graph.build_normalized_adjacency(jnp.asarray(idx), d=d, d_g=d_g,
+                                           impl="xla")
+    chunked = streaming.ChunkedELL.from_dense(
+        idx, np.asarray(adj.rowscale), chunk_size, d=d, d_g=d_g, impl="xla")
+    assert chunked.max_chunk_rows <= chunk_size
+    assert chunked.ell_device_bytes_peak <= chunk_size * idx.shape[1] * 4
+    u = jax.random.normal(jax.random.PRNGKey(1), (idx.shape[0], 5), jnp.float32)
+    want = np.asarray(adj.gram_matvec(u))
+    got = np.asarray(chunked.gram_matvec(u))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_rmatmat_matmat_adjoint(ell):
+    """⟨Ẑᵀu, v⟩ == ⟨u, Ẑv⟩ through the streaming representation."""
+    idx, d, d_g = ell
+    adj = graph.build_normalized_adjacency(jnp.asarray(idx), d=d, d_g=d_g,
+                                           impl="xla")
+    chunked = streaming.ChunkedELL.from_dense(
+        idx, np.asarray(adj.rowscale), 96, d=d, d_g=d_g, impl="xla")
+    u = jax.random.normal(jax.random.PRNGKey(2), (idx.shape[0], 3))
+    v = jax.random.normal(jax.random.PRNGKey(3), (d, 3))
+    lhs = float(jnp.sum(chunked.rmatmat(u) * v))
+    rhs = float(jnp.sum(u * chunked.matmat(v)))
+    assert abs(lhs - rhs) < 1e-3 * max(abs(lhs), 1.0)
+
+
+def test_chunked_transform_matches_single_shot():
+    """RB binning is row-local: chunked transform is bit-identical."""
+    x, _ = make_rings(300, 2, seed=1)
+    params = rb.make_rb_params(jax.random.PRNGKey(4), 16, 2, 0.15, d_g=512)
+    want = np.asarray(rb.rb_transform(jnp.asarray(x), params))
+    chunks = streaming.chunked_rb_transform(
+        streaming.as_row_chunks(x, 90), params)
+    assert np.array_equal(np.concatenate(chunks), want)
+
+
+def test_suggest_d_g_and_sigma_accept_chunked_input():
+    """Chunked suggestions gather the same subsample as the dense path —
+    no host concatenation of the full dataset, identical outputs."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(3000, 3)).astype(np.float32)
+    chunks = streaming.as_row_chunks(x, 700)
+    assert rb.suggest_d_g(chunks, 0.5) == rb.suggest_d_g(x, 0.5)
+    assert rb.suggest_sigma(chunks) == rb.suggest_sigma(x)
+
+
+def test_sc_rb_streaming_labels_match_unchunked():
+    """(c) End-to-end: sc_rb(chunk_size=...) reproduces the unchunked labels
+    up to permutation on the ring benchmark, with bounded ELL residency."""
+    x, y = make_rings(600, 2, seed=0)
+    base = dict(n_clusters=2, n_grids=96, sigma=0.15, d_g=4096,
+                kmeans_replicates=2, solver_tol=1e-3, seed=0)
+    ref = sc_rb(jnp.asarray(x), SCRBConfig(**base))
+    res = sc_rb(jnp.asarray(x), SCRBConfig(**base, chunk_size=256))
+    # accuracy() maximizes agreement over label permutations
+    assert metrics.accuracy(res.labels, ref.labels) >= 0.99
+    assert metrics.accuracy(res.labels, y) > 0.95
+    assert res.diagnostics["n_chunks"] == 3          # 256+256+88 (ragged)
+    assert res.diagnostics["chunk_rows_max"] == 256
+    assert res.diagnostics["ell_device_bytes_peak"] == 256 * 96 * 4
+
+
+@pytest.mark.slow
+def test_sc_rb_streaming_auto_d_g_prechunked():
+    """Out-of-core entry point: a list of row blocks never concatenated,
+    d_g auto-probed from the chunked sample."""
+    x, y = make_rings(500, 2, seed=2)
+    blocks = [x[:200], x[200:400], x[400:]]
+    res = sc_rb(blocks, SCRBConfig(
+        n_clusters=2, n_grids=96, sigma=0.15, kmeans_replicates=2, seed=0,
+        chunk_size=200))
+    assert metrics.accuracy(res.labels, y) > 0.95
+
+
+def test_sc_rb_streaming_accepts_prechunked_input():
+    """Pre-chunked input at fixed d_g (fast-tier variant of the above).
+
+    Blocks are sized to match the e2e test's chunking so the per-chunk
+    kernels hit the session jit cache.
+    """
+    x, y = make_rings(600, 2, seed=2)
+    blocks = [x[:256], x[256:512], x[512:]]
+    res = sc_rb(blocks, SCRBConfig(
+        n_clusters=2, n_grids=96, sigma=0.15, d_g=4096, kmeans_replicates=2,
+        solver_tol=1e-3, seed=0, chunk_size=256))
+    assert metrics.accuracy(res.labels, y) > 0.95
+
+
+@pytest.mark.slow
+def test_spectral_embed_streaming_parity():
+    x, _ = make_rings(400, 2, seed=3)
+    base = dict(n_clusters=2, n_grids=64, sigma=0.15, d_g=2048, seed=1)
+    u_ref, sv_ref = spectral_embed(jnp.asarray(x), SCRBConfig(**base))
+    u, sv = spectral_embed(jnp.asarray(x), SCRBConfig(**base, chunk_size=128))
+    np.testing.assert_allclose(np.asarray(sv), np.asarray(sv_ref), atol=1e-3)
+    # embeddings agree up to per-column sign
+    ur, uc = np.asarray(u_ref), np.asarray(u)
+    for j in range(ur.shape[1]):
+        dot = float(np.dot(ur[:, j], uc[:, j]))
+        np.testing.assert_allclose(np.sign(dot) * uc[:, j], ur[:, j],
+                                   atol=5e-2)
+
+
+def test_streaming_requires_lobpcg():
+    x, _ = make_rings(300, 2, seed=4)
+    with pytest.raises(ValueError, match="streaming"):
+        sc_rb(jnp.asarray(x), SCRBConfig(
+            n_clusters=2, n_grids=32, sigma=0.15, d_g=512, chunk_size=128,
+            solver="lanczos"))
+
+
+def test_traceable_chunked_matvec_under_jit(ell):
+    """chunked_gram_matvec is a lax.scan — usable inside jit (the
+    distributed path chunks within each row shard)."""
+    idx, d, d_g = ell
+    idxj = jnp.asarray(idx)
+    adj = graph.build_normalized_adjacency(idxj, d=d, d_g=d_g, impl="xla")
+    u = jax.random.normal(jax.random.PRNGKey(6), (idx.shape[0], 4))
+    want = np.asarray(adj.gram_matvec(u))
+    fn = jax.jit(lambda a, b, s: streaming.chunked_gram_matvec(
+        a, b, s, d=d, d_g=d_g, chunk_size=128, impl="xla"))
+    got = np.asarray(fn(idxj, u, adj.rowscale))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

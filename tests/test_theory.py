@@ -9,6 +9,7 @@ from repro.core.baselines import METHODS, BaselineConfig
 from repro.data.synthetic import make_rings
 
 
+@pytest.mark.slow
 def test_kernel_estimator_variance_shrinks_with_R():
     """MC variance of the RB kernel estimate decays like 1/R (Eq. 4)."""
     rng = np.random.default_rng(0)

@@ -56,6 +56,7 @@ def test_compressed_grads_converge():
     assert float(jnp.abs(params["w"]).max()) < 0.35  # error feedback unbiased
 
 
+@pytest.mark.slow
 def test_training_loss_decreases():
     cfg = smoke_config("internlm2-1.8b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -68,6 +69,7 @@ def test_training_loss_decreases():
     assert last["loss"] < first["loss"] - 0.3, (first["loss"], last["loss"])
 
 
+@pytest.mark.slow
 def test_grad_accumulation_matches_full_batch():
     cfg = smoke_config("internlm2-1.8b")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -85,6 +87,7 @@ def test_grad_accumulation_matches_full_batch():
     assert max(jax.tree_util.tree_leaves(d)) < 5e-3
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip(tmp_path):
     tree = {"a": jnp.arange(6.0).reshape(2, 3),
             "b": {"c": jnp.ones((4,), jnp.int32)}}
