@@ -1,20 +1,30 @@
-"""Streaming SC_RB: peak ELL device residency vs N, runtime stays linear.
+"""Streaming SC_RB: peak device residency vs N, runtime stays linear.
 
 The paper's Fig. 4 shows linear runtime in N; the single-shot pipeline still
-needs the whole (N, R) ELL matrix on device. This cell sweeps N with a fixed
-``chunk_size`` and reports:
+needs the whole (N, R) ELL matrix — and an (N, K) embedding — on device.
+This cell sweeps N with a fixed ``chunk_size`` and reports:
 
-  - peak device residency of the ELL matrix (constant O(chunk·R) for the
-    streaming run vs O(N·R) single-shot) — the out-of-core headroom,
-  - per-stage runtime and a log-log slope (≈1 ⇒ the chunked two-pass degrees
-    and blocked Gram mat-vec preserve the linear-in-N claim),
+  - end-to-end peak device residency of the streaming run, labels included:
+    the ELL chunk (O(chunk·R)) *and* the dense LOBPCG/embedding chunk
+    (O(chunk·(K+buffer))) — both flat in N, vs the single-shot O(N·R)+O(N·K),
+  - per-stage runtime and a log-log slope (≈1 ⇒ the chunked two-pass degrees,
+    blocked Gram mat-vec, chunked LOBPCG and streaming k-means preserve the
+    linear-in-N claim),
+  - a prefetch on/off sweep at the largest N so the H2D double-buffering win
+    (transfer overlapped with compute) is measurable,
   - label agreement between the streaming and single-shot runs at the
     smallest N (sanity: same algorithm, not an approximation).
+
+``--gate`` turns the report into a CI check (the ``bench-smoke`` job): exit
+non-zero if the runtime slope exceeds ``--max-slope`` or if either residency
+series grows with N on the chunked path. The JSON written to ``--out`` is
+uploaded as the ``BENCH_PR.json`` artifact.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import jax.numpy as jnp
 import numpy as np
@@ -22,66 +32,147 @@ import numpy as np
 from repro.core import SCRBConfig, metrics, sc_rb
 from repro.data.synthetic import make_rings
 
+STAGES = ("rb_features", "degrees", "svd", "kmeans")
 
-def run(ns=(1_000, 2_000, 4_000, 8_000), chunk_size: int = 1_024,
-        rank: int = 128, seed: int = 0):
-    out = {"ns": list(ns), "chunk_size": chunk_size, "total_s": [],
+
+def run(ns=(1_000, 2_000, 4_000, 8_000, 16_000), chunk_size: int = 1_024,
+        rank: int = 128, seed: int = 0, prefetch_sweep: bool = True):
+    out = {"ns": list(ns), "chunk_size": chunk_size, "rank": rank,
+           "total_s": [],
            "ell_bytes_streaming": [], "ell_bytes_single_shot": [],
-           "stages": {}}
-    stages = ["rb_features", "degrees", "svd", "kmeans"]
-    for st in stages:
-        out["stages"][st] = []
+           "embedding_bytes_streaming": [], "embedding_bytes_single_shot": [],
+           "h2d_max_chunk_bytes": [],
+           "stages": {st: [] for st in STAGES}}
 
-    def cfg(extra=None):
+    def cfg(chunk=None, prefetch=True, fixed_iters=None):
+        # fixed_iters pins the LOBPCG to an exact iteration count (tol=0) so
+        # the scaling sweep measures a fixed amount of work per row — the
+        # iterations-to-convergence lottery otherwise drowns the N-slope.
         return SCRBConfig(n_clusters=2, n_grids=rank, sigma=0.15,
-                          kmeans_replicates=4, seed=seed, chunk_size=extra)
+                          kmeans_replicates=4, seed=seed, chunk_size=chunk,
+                          prefetch=prefetch,
+                          solver_iters=fixed_iters or 300,
+                          solver_tol=0.0 if fixed_iters else 1e-4)
 
-    # warm-up + parity check at the smallest N
+    # warm-up + parity check at the smallest N (converged configuration)
     x0, y0 = make_rings(ns[0], 2, seed=seed)
     ref = sc_rb(jnp.asarray(x0), cfg(None))
     res0 = sc_rb(x0, cfg(chunk_size))
     agree = metrics.accuracy(res0.labels, ref.labels)
+    ari = metrics.adjusted_rand_index(res0.labels, ref.labels)
     out["label_agreement_at_n0"] = agree
-    print(f"[fig6] parity at N={ns[0]}: label agreement {agree:.3f}")
+    out["label_ari_at_n0"] = ari
+    print(f"[fig6] parity at N={ns[0]}: label agreement {agree:.3f} "
+          f"(ARI {ari:.3f})")
 
+    from repro.core.eigensolver import lobpcg_block_width
+    c0 = cfg()
+    sweep_iters = 40
+    out["sweep_solver_iters"] = sweep_iters
     for n in ns:
+        b = lobpcg_block_width(n, c0.n_clusters, c0.solver_buffer)
         x, _ = make_rings(n, 2, seed=seed)
-        res = sc_rb(x, cfg(chunk_size))
-        for st in stages:
+        res = sc_rb(x, cfg(chunk_size, fixed_iters=sweep_iters))
+        for st in STAGES:
             out["stages"][st].append(res.timer.times.get(st, 0.0))
         out["total_s"].append(res.timer.total)
         out["ell_bytes_streaming"].append(
             res.diagnostics["ell_device_bytes_peak"])
         out["ell_bytes_single_shot"].append(n * rank * 4)
-        ratio = n * rank * 4 / res.diagnostics["ell_device_bytes_peak"]
+        out["embedding_bytes_streaming"].append(
+            res.diagnostics["embedding_device_bytes_peak"])
+        out["embedding_bytes_single_shot"].append(n * b * 4)
+        out["h2d_max_chunk_bytes"].append(
+            res.diagnostics["h2d_max_chunk_bytes"])
+        ratio = ((n * rank * 4 + n * b * 4)
+                 / (res.diagnostics["ell_device_bytes_peak"]
+                    + res.diagnostics["embedding_device_bytes_peak"]))
         print(f"[fig6] N={n:7d} total={res.timer.total:6.2f}s "
               f"ell_peak={res.diagnostics['ell_device_bytes_peak']/2**20:.1f}MiB "
+              f"emb_peak={res.diagnostics['embedding_device_bytes_peak']/2**10:.1f}KiB "
               f"(single-shot would be {ratio:.1f}x larger)")
 
-    # streaming peak residency must be flat in N once N > chunk_size
-    assert all(b <= chunk_size * rank * 4 for b in out["ell_bytes_streaming"])
     ln_n = np.log(np.asarray(out["ns"][1:], float))
     ln_t = np.log(np.maximum(np.asarray(out["total_s"][1:], float), 1e-9))
     slope = float(np.polyfit(ln_n, ln_t, 1)[0]) if len(ns) > 2 else float("nan")
     out["loglog_slope"] = slope
     print(f"[fig6] log-log runtime slope = {slope:.2f} "
           f"(1.0 = linear; streaming keeps the paper's scaling)")
+
+    if prefetch_sweep:
+        # H2D overlap win: same N, double-buffered uploads on vs off
+        x, _ = make_rings(ns[-1], 2, seed=seed)
+        sweep = {}
+        for prefetch in (True, False):
+            res = sc_rb(x, cfg(chunk_size, prefetch=prefetch,
+                               fixed_iters=sweep_iters))
+            sweep["on" if prefetch else "off"] = {
+                "total_s": res.timer.total,
+                "stages": {st: res.timer.times.get(st, 0.0) for st in STAGES},
+            }
+        out["prefetch"] = sweep
+        speedup = sweep["off"]["total_s"] / max(sweep["on"]["total_s"], 1e-9)
+        out["prefetch_speedup"] = speedup
+        print(f"[fig6] prefetch on/off at N={ns[-1]}: "
+              f"{sweep['on']['total_s']:.2f}s / {sweep['off']['total_s']:.2f}s "
+              f"({speedup:.2f}x)")
     return out
+
+
+def gate(out: dict, max_slope: float = 1.25) -> list[str]:
+    """CI pass/fail conditions for the streaming path (bench-smoke job)."""
+    failures = []
+    slope = out["loglog_slope"]
+    if not np.isnan(slope) and slope > max_slope:
+        failures.append(
+            f"runtime slope {slope:.2f} exceeds {max_slope} — streaming "
+            f"path lost the linear-in-N scaling")
+    # residency is only flat once N ≥ chunk_size (below that the whole
+    # dataset is a single smaller chunk), so gate on that regime only
+    saturated = [i for i, n in enumerate(out["ns"])
+                 if n >= out["chunk_size"]]
+    for series in ("ell_bytes_streaming", "embedding_bytes_streaming",
+                   "h2d_max_chunk_bytes"):
+        vals = [out[series][i] for i in saturated]
+        if len(vals) >= 2 and any(b > vals[0] for b in vals[1:]):
+            failures.append(
+                f"{series} grows with N ({vals} at ns ≥ chunk_size) — an "
+                f"O(N) device allocation crept back into the chunked path")
+    if out["label_ari_at_n0"] < 0.95:
+        failures.append(
+            f"streaming vs single-shot label agreement ARI "
+            f"{out['label_ari_at_n0']:.3f} < 0.95")
+    return failures
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--max-n", type=int, default=8_000)
+    ap.add_argument("--max-n", type=int, default=16_000)
     ap.add_argument("--chunk-size", type=int, default=1_024)
+    ap.add_argument("--rank", type=int, default=128)
     ap.add_argument("--out", default="bench_results/fig6.json")
+    ap.add_argument("--gate", action="store_true",
+                    help="exit non-zero if slope/residency/parity regress")
+    ap.add_argument("--max-slope", type=float, default=1.25)
+    ap.add_argument("--no-prefetch-sweep", action="store_true")
     args = ap.parse_args()
     ns = [n for n in (1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000)
           if n <= args.max_n]
-    res = run(ns=tuple(ns), chunk_size=args.chunk_size)
+    res = run(ns=tuple(ns), chunk_size=args.chunk_size, rank=args.rank,
+              prefetch_sweep=not args.no_prefetch_sweep)
     import os
-    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    if os.path.dirname(args.out):
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    failures = gate(res, max_slope=args.max_slope)
+    res["gate_failures"] = failures
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1)
+    if args.gate:
+        if failures:
+            for msg in failures:
+                print(f"[fig6][GATE FAIL] {msg}", file=sys.stderr)
+            sys.exit(1)
+        print("[fig6] gate passed: slope, residency, and parity within bounds")
 
 
 if __name__ == "__main__":

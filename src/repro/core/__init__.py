@@ -19,12 +19,16 @@ from repro.core.graph import (  # noqa: F401
     rb_degrees_exact, degrees_from_counts,
 )
 from repro.core.streaming import (  # noqa: F401
-    ChunkedELL, as_row_chunks, build_chunked_adjacency, chunked_degrees,
-    chunked_rb_transform, chunked_gram_matvec,
+    ChunkedDense, ChunkedELL, as_row_chunks, build_chunked_adjacency,
+    chunked_degrees, chunked_rb_transform, chunked_gram_matvec,
 )
 from repro.core.eigensolver import (  # noqa: F401
-    EigResult, lobpcg, lanczos, subspace_iteration, top_k_eigenpairs,
+    EigResult, lobpcg, lobpcg_host_chunked, lanczos, subspace_iteration,
+    top_k_eigenpairs,
 )
-from repro.core.kmeans import KMeansResult, kmeans, row_normalize  # noqa: F401
+from repro.core.kmeans import (  # noqa: F401
+    KMeansResult, kmeans, minibatch_kmeans, row_normalize,
+    row_normalize_chunks, streaming_kmeans,
+)
 from repro.core.pipeline import SCRBConfig, SCRBResult, sc_rb, spectral_embed  # noqa: F401
 from repro.core import baselines, metrics  # noqa: F401

@@ -13,10 +13,11 @@ baselines for the paper's solver study.
 from __future__ import annotations
 
 import functools
-from typing import Callable, NamedTuple
+from typing import Callable, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Matvec = Callable[[jax.Array], jax.Array]
 
@@ -192,6 +193,174 @@ def lobpcg_host(
     return _lobpcg_finalize(x, ax, jnp.int32(it))
 
 
+# --------------------------------------------------------------------------
+# Chunked LOBPCG: block vectors live as host-resident row chunks
+# (streaming.ChunkedDense); only the Gram mat-vec touches the device, one
+# chunk at a time. The small (3b, 3b) block algebra runs in host float64.
+# --------------------------------------------------------------------------
+
+def _chunks_inner(a: Sequence[np.ndarray], b: Sequence[np.ndarray]) -> np.ndarray:
+    """Σ_c A_cᵀ B_c in float64 — the tall-matrix inner products of LOBPCG."""
+    out = None
+    for ac, bc in zip(a, b):
+        g = ac.astype(np.float64).T @ bc.astype(np.float64)
+        out = g if out is None else out + g
+    return out
+
+
+def _chunks_col_dots(a: Sequence[np.ndarray], b: Sequence[np.ndarray]) -> np.ndarray:
+    """diag(AᵀB) without forming the full Gram: Σ_c colsum(A_c ∘ B_c)."""
+    return sum(
+        np.sum(ac.astype(np.float64) * bc.astype(np.float64), axis=0)
+        for ac, bc in zip(a, b))
+
+
+def _chunks_resnorms(x, ax, theta) -> np.ndarray:
+    """Relative residual norms ‖AX − XΘ‖_col / Θ, streamed over chunks."""
+    rnorm2 = sum(
+        np.sum((axc.astype(np.float64) - xc.astype(np.float64)
+                * theta[None, :]) ** 2, axis=0)
+        for xc, axc in zip(x, ax))
+    return np.sqrt(rnorm2) / np.maximum(theta, 1e-12)
+
+
+def _chunks_cholqr(
+    x: Sequence[np.ndarray], ax: Optional[Sequence[np.ndarray]] = None
+):
+    """Cholesky-QR of a chunked tall-skinny block: X ← X·L⁻ᵀ (chunk-local),
+    with AX kept consistent through the same triangular factor.
+
+    X is (near-)orthonormal at every call site (random start block, or the
+    output of a whitened Rayleigh–Ritz), so XᵀX is well conditioned and a
+    single Cholesky pass suffices; on numerical breakdown the factorization
+    is skipped (mirroring the dense path's unsafe-column guard).
+    """
+    m = _chunks_inner(x, x)
+    m = 0.5 * (m + m.T)
+    try:
+        lfac = np.linalg.cholesky(
+            m + 1e-12 * max(np.trace(m) / m.shape[0], 1.0) * np.eye(m.shape[0]))
+    except np.linalg.LinAlgError:
+        return list(x), None if ax is None else list(ax)
+    xq = [np.linalg.solve(lfac, c.astype(np.float64).T).T.astype(np.float32)
+          for c in x]
+    if ax is None:
+        return xq, None
+    axq = [np.linalg.solve(lfac, c.astype(np.float64).T).T.astype(np.float32)
+           for c in ax]
+    return xq, axq
+
+
+def _whitened_rayleigh_ritz_grams_np(gram_m, gram_a, k, rcond=3e-4):
+    """Host-float64 twin of ``_whitened_rayleigh_ritz`` taking the (3b, 3b)
+    Gram matrices directly (the chunked path accumulates them streamingly
+    and never materializes S)."""
+    m = gram_m.shape[0]
+    gram_a = 0.5 * (gram_a + gram_a.T)
+    lam, v = np.linalg.eigh(0.5 * (gram_m + gram_m.T))
+    keep = lam > rcond * np.max(lam)
+    inv_sqrt = np.where(keep, 1.0 / np.sqrt(np.maximum(lam, 1e-30)), 0.0)
+    wh = v * inv_sqrt[None, :]
+    t = wh.T @ gram_a @ wh
+    t = 0.5 * (t + t.T)
+    t = t - (1.0 - keep.astype(t.dtype))[:, None] * np.eye(m)
+    evals, evecs = np.linalg.eigh(t)
+    top = np.arange(m - k, m)[::-1]
+    return evals[top], wh @ evecs[:, top]
+
+
+def lobpcg_host_chunked(
+    matvec: Callable,
+    x0,
+    *,
+    max_iters: int = 200,
+    tol: float = 1e-5,
+) -> EigResult:
+    """LOBPCG whose block iterates never exist as O(N) device arrays.
+
+    ``x0`` is a ``streaming.ChunkedDense`` start block; ``matvec`` maps a
+    ``ChunkedDense`` to a ``ChunkedDense`` with the same chunking (e.g.
+    ``ChunkedELL.gram_matvec_chunked`` — device residency one chunk + the
+    (D, K) accumulator). All tall operands (X, AX, W, P, AP) stay on the
+    host in row chunks; the O(b²)/O(b³) Rayleigh–Ritz algebra runs in host
+    float64. Same math as ``lobpcg_host``; the Ritz *embedding is emitted as
+    host-resident row chunks*, so downstream stages (row normalization,
+    streaming k-means) can keep streaming.
+    """
+    from repro.core.streaming import ChunkedDense
+
+    n, k = x0.n, x0.k
+    if 3 * k > n:
+        raise ValueError(f"block too large: need 3k ≤ n, got k={k}, n={n}")
+    wrap = lambda chunks: ChunkedDense(tuple(chunks))
+    mv = lambda chunks: list(matvec(wrap(chunks)).chunks)
+
+    x, _ = _chunks_cholqr([c.astype(np.float32) for c in x0.chunks])
+    ax = mv(x)
+    p = [np.zeros_like(c) for c in x]
+    ap = [np.zeros_like(c) for c in x]
+    it = 0
+    res = np.full((k,), np.inf)
+    while it < max_iters:
+        theta = _chunks_col_dots(x, ax)                  # Ritz values
+        res = _chunks_resnorms(x, ax, theta)
+        if float(np.max(res)) <= tol:
+            break
+        active = (res > tol).astype(np.float32)
+        thetaf = theta.astype(np.float32)
+        w = [(axc - xc * thetaf[None, :]) * active[None, :]
+             for xc, axc in zip(x, ax)]
+        proj = _chunks_inner(x, w).astype(np.float32)    # project W ⊥ X
+        w = [wc - xc @ proj for xc, wc in zip(x, w)]
+        wn = np.sqrt(np.maximum(_chunks_col_dots(w, w), 0.0))
+        wscale = (np.where(wn > 1e-10, 1.0 / np.maximum(wn, 1e-12), 0.0)
+                  .astype(np.float32))
+        w = [wc * wscale[None, :] for wc in w]
+        aw = mv(w)
+
+        # [X|W|P] Rayleigh–Ritz from streamed (3b, 3b) Gram accumulations,
+        # assembled block-structured (3×3 of b×b) — no per-chunk concat copy
+        gram_m = np.zeros((3 * k, 3 * k))
+        gram_a = np.zeros((3 * k, 3 * k))
+        s_blocks, a_blocks = (x, w, p), (ax, aw, ap)
+        for i in range(3):
+            for j in range(3):
+                bi, bj = slice(i * k, (i + 1) * k), slice(j * k, (j + 1) * k)
+                if i <= j:                               # SᵀS is symmetric
+                    gram_m[bi, bj] = _chunks_inner(s_blocks[i], s_blocks[j])
+                    gram_m[bj, bi] = gram_m[bi, bj].T
+                gram_a[bi, bj] = _chunks_inner(s_blocks[i], a_blocks[j])
+        _, c = _whitened_rayleigh_ritz_grams_np(gram_m, gram_a, k)
+        cf = c.astype(np.float32)
+        cx, cw, cp = cf[:k], cf[k:2 * k], cf[2 * k:]
+        x_new, ax_new, p_new, ap_new = [], [], [], []
+        for xc, wc, pc, axc, awc, apc in zip(x, w, p, ax, aw, ap):
+            x_new.append(xc @ cx + wc @ cw + pc @ cp)
+            ax_new.append(axc @ cx + awc @ cw + apc @ cp)
+            # implicit P: the W/P component only (X rows of C zeroed)
+            p_new.append(wc @ cw + pc @ cp)
+            ap_new.append(awc @ cw + apc @ cp)
+        # drift control: re-orthonormalize X, AX kept consistent (chol-QR)
+        x, ax = _chunks_cholqr(x_new, ax_new)
+        pn = np.sqrt(np.maximum(_chunks_col_dots(p_new, p_new), 0.0))
+        pscale = (np.where(pn > 1e-10, 1.0 / np.maximum(pn, 1e-12), 0.0)
+                  .astype(np.float32))
+        p = [pc * pscale[None, :] for pc in p_new]
+        ap = [apc * pscale[None, :] for apc in ap_new]
+        it += 1
+        if it % 16 == 0:
+            # periodic exact refresh of AX kills recombination drift
+            ax = mv(x)
+
+    theta = _chunks_col_dots(x, ax)
+    order = np.argsort(-theta)
+    res_final = _chunks_resnorms(x, ax, theta)
+    vectors = wrap([np.ascontiguousarray(c[:, order]) for c in x])
+    return EigResult(
+        jnp.asarray(theta[order], jnp.float32), vectors,
+        jnp.asarray(res_final[order], jnp.float32), jnp.int32(it))
+
+
 def lanczos(
     matvec: Matvec,
     v0: jax.Array,
@@ -294,6 +463,13 @@ SOLVERS = {
 }
 
 
+def lobpcg_block_width(n: int, k: int, buffer: int) -> int:
+    """Width of the LOBPCG iterate block X (k + convergence buffer, capped so
+    [X|W|P] fits: 3·b ≤ n). Shared with the pipeline's residency diagnostics
+    so the reported dense-chunk peak tracks the actual block size."""
+    return min(k + buffer, max(k, n // 3))
+
+
 def top_k_eigenpairs(
     matvec: Matvec,
     n: int,
@@ -305,6 +481,7 @@ def top_k_eigenpairs(
     tol: float = 1e-5,
     buffer: int = 4,
     streaming: bool = False,
+    chunk_sizes: Optional[Sequence[int]] = None,
 ) -> EigResult:
     """Solve for the top-k eigenpairs with a small convergence buffer block.
 
@@ -315,8 +492,22 @@ def top_k_eigenpairs(
     ``streaming=True`` marks ``matvec`` as eager-only (it streams host
     chunks), so the iteration must be driven from the host; only the
     LOBPCG solver has a host driver.
+
+    With ``chunk_sizes`` given, ``matvec`` must map ``ChunkedDense`` →
+    ``ChunkedDense`` over that chunking, the start block is generated
+    per-chunk (never an O(N) device array), and the returned ``vectors``
+    are a host-chunked ``ChunkedDense``.
     """
-    b = min(k + buffer, max(k, n // 3))
+    b = lobpcg_block_width(n, k, buffer)
+    if chunk_sizes is not None:
+        if solver not in ("lobpcg", "lobpcg_host"):
+            raise ValueError(
+                f"streaming mat-vecs require solver='lobpcg', got {solver!r}")
+        from repro.core.streaming import ChunkedDense
+        x0c = ChunkedDense.random_normal(key, chunk_sizes, b)
+        out = lobpcg_host_chunked(matvec, x0c, max_iters=max_iters, tol=tol)
+        return EigResult(out.theta[:k], out.vectors.take_cols(k),
+                         out.resnorms[:k], out.iterations)
     x0 = jax.random.normal(key, (n, b), jnp.float32)
     if streaming:
         if solver not in ("lobpcg", "lobpcg_host"):

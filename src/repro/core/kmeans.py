@@ -7,12 +7,14 @@ XLA kernel in ``repro.kernels.ops``.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import ops
+from repro.utils import prefetch_to_device
 
 
 class KMeansResult(NamedTuple):
@@ -113,7 +115,10 @@ def minibatch_kmeans(
     x = x.astype(jnp.float32)
     n = x.shape[0]
     kinit, kloop = jax.random.split(key)
-    sample0 = x[jax.random.choice(kinit, n, (max(4 * k, 64),), replace=False)]
+    # clamp the seed pool to n: choice(replace=False) crashes for tiny
+    # inputs where the default pool max(4k, 64) exceeds the row count
+    pool = min(n, max(4 * k, 64))
+    sample0 = x[jax.random.choice(kinit, n, (pool,), replace=False)]
     cents0 = _plusplus_init(jax.random.fold_in(kinit, 1), sample0, k)
 
     def step(carry, skey):
@@ -136,3 +141,137 @@ def minibatch_kmeans(
         jax.random.split(kloop, n_steps))
     labels, dists = ops.kmeans_assign(x, cents, impl=impl)
     return KMeansResult(cents, labels, jnp.sum(dists))
+
+
+# --------------------------------------------------------------------------
+# Out-of-core k-means over host-resident row chunks (streaming pipeline
+# stages 4–5): chunked row normalization, reservoir-seeded k-means++, and
+# Sculley-style mini-batch updates fed by prefetched chunk iteration.
+# --------------------------------------------------------------------------
+
+Chunks = Union[Sequence[np.ndarray], "object"]   # ChunkedDense or np blocks
+
+
+def _as_chunk_list(chunks: Chunks) -> list[np.ndarray]:
+    if hasattr(chunks, "chunks"):                # streaming.ChunkedDense
+        return [np.asarray(c, np.float32) for c in chunks.chunks]
+    return [np.asarray(c, np.float32) for c in chunks]
+
+
+def row_normalize_chunks(chunks: Chunks, *, prefetch: bool = True,
+                         stats: Optional[dict] = None):
+    """Chunked Alg. 2 step 4: unit-ℓ₂ rows, one chunk on device at a time.
+
+    Row normalization is row-local, so this is bit-identical to
+    ``row_normalize`` on the concatenated array for any chunking (it runs
+    the very same jax computation per chunk).
+    """
+    from repro.core.streaming import ChunkedDense
+    out = [
+        np.asarray(row_normalize(c))
+        for c in prefetch_to_device(_as_chunk_list(chunks), enabled=prefetch,
+                                    stats=stats)
+    ]
+    return ChunkedDense(tuple(out))
+
+
+def _reservoir_sample_chunks(
+    chunks: Sequence[np.ndarray], pool_size: int, rng: np.random.Generator
+) -> np.ndarray:
+    """Uniform reservoir (Algorithm R) over streamed row chunks — one pass,
+    O(pool_size) host memory, never concatenates the dataset."""
+    dim = chunks[0].shape[1]
+    pool = np.empty((pool_size, dim), np.float32)
+    seen = 0
+    for c in chunks:
+        rows = c.shape[0]
+        gidx = seen + np.arange(rows)
+        head = gidx < pool_size                  # fill phase
+        pool[gidx[head]] = c[head]
+        tail = ~head
+        if np.any(tail):
+            draws = rng.integers(0, gidx[tail] + 1)
+            replace = draws < pool_size
+            # later rows overwrite earlier ones on collision — matches the
+            # sequential algorithm (np fancy assignment keeps the last write)
+            pool[draws[replace]] = c[tail][replace]
+        seen += rows
+    return pool
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _minibatch_update(xb, cents, counts, *, impl):
+    """One Sculley step from a full chunk: per-center 1/count learning rate."""
+    _, add, sums, _ = ops.kmeans_assign_stats(xb, cents, impl=impl)
+    counts_new = counts + add
+    lr = add / jnp.maximum(counts_new, 1.0)
+    target = sums / jnp.maximum(add, 1.0)[:, None]
+    cents = jnp.where((add > 0)[:, None],
+                      cents + lr[:, None] * (target - cents), cents)
+    return cents, counts_new
+
+
+def streaming_kmeans(
+    key: jax.Array,
+    chunks: Chunks,
+    k: int,
+    *,
+    n_steps: int = 100,
+    n_replicates: int = 4,
+    impl: str = "auto",
+    prefetch: bool = True,
+    stats: Optional[dict] = None,
+) -> KMeansResult:
+    """k-means over host-resident row chunks — no O(N) device allocation.
+
+    The out-of-core final stage of the streaming SC_RB pipeline:
+
+      1. *Seeding* — a uniform reservoir sample (one streamed pass) stands in
+         for the full dataset; k-means++ D² seeding runs on the pool, once
+         per replicate.
+      2. *Updates* — ``minibatch_kmeans``-style steps (Sculley 2010) fed by
+         cyclic prefetched chunk iteration; every replicate shares each
+         uploaded chunk, so r replicates cost one data pass.
+      3. *Final sweep* — one chunked assignment pass scoring every
+         replicate's inertia and emitting its per-chunk host labels (O(r·N)
+         int32 host memory, same order as the chunked embedding itself — a
+         second streamed pass would cost more than the label storage); the
+         best replicate's chunks are concatenated into the result.
+
+    Peak device residency: one chunk + O(r·k·dim) centroids.
+    """
+    chunk_list = _as_chunk_list(chunks)
+    n = sum(c.shape[0] for c in chunk_list)
+    if k > n:
+        raise ValueError(f"k={k} exceeds row count n={n}")
+    seed = int(jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max))
+    rng = np.random.default_rng(seed)
+    pool_size = min(n, max(4 * k, 64))
+    pool = jnp.asarray(_reservoir_sample_chunks(chunk_list, pool_size, rng))
+
+    rep_keys = jax.random.split(jax.random.fold_in(key, 1), n_replicates)
+    cents = [_plusplus_init(rk, pool, k) for rk in rep_keys]
+    counts = [jnp.zeros((k,), jnp.float32) for _ in range(n_replicates)]
+
+    step = 0
+    while step < n_steps:
+        for xb in prefetch_to_device(chunk_list, enabled=prefetch,
+                                     stats=stats):
+            if step >= n_steps:
+                break
+            for rep in range(n_replicates):
+                cents[rep], counts[rep] = _minibatch_update(
+                    xb, cents[rep], counts[rep], impl=impl)
+            step += 1
+
+    inertia = np.zeros((n_replicates,))
+    label_chunks = [[] for _ in range(n_replicates)]
+    for xb in prefetch_to_device(chunk_list, enabled=prefetch, stats=stats):
+        for rep in range(n_replicates):
+            labels_c, dists = ops.kmeans_assign(xb, cents[rep], impl=impl)
+            inertia[rep] += float(jnp.sum(dists))
+            label_chunks[rep].append(np.asarray(labels_c))
+    best = int(np.argmin(inertia))
+    return KMeansResult(
+        np.asarray(cents[best]), np.concatenate(label_chunks[best]),
+        np.float32(inertia[best]))

@@ -52,6 +52,26 @@ def rand_index(labels_pred: np.ndarray, labels_true: np.ndarray) -> float:
     return float((sum_ij + tn) / total_pairs)
 
 
+def adjusted_rand_index(labels_pred: np.ndarray, labels_true: np.ndarray) -> float:
+    """ARI = (RI − E[RI]) / (max RI − E[RI]) — chance-corrected Rand index.
+
+    Used by the streaming-vs-single-shot parity gates (label agreement must
+    be ≥ 0.95); kept out of ``all_metrics`` so the Table 2 average-rank
+    protocol stays exactly the paper's.
+    """
+    c = contingency(labels_pred, labels_true).astype(np.float64)
+    n = c.sum()
+    sum_ij = (c * (c - 1) / 2.0).sum()
+    a = (c.sum(axis=1) * (c.sum(axis=1) - 1) / 2.0).sum()
+    b = (c.sum(axis=0) * (c.sum(axis=0) - 1) / 2.0).sum()
+    total = n * (n - 1) / 2.0
+    expected = a * b / total if total > 0 else 0.0
+    denom = 0.5 * (a + b) - expected
+    if denom == 0:
+        return 1.0
+    return float((sum_ij - expected) / denom)
+
+
 def f_measure(labels_pred: np.ndarray, labels_true: np.ndarray) -> float:
     """Paper's FM: mean over predicted clusters of the best-matching F1."""
     c = contingency(labels_pred, labels_true).astype(np.float64)

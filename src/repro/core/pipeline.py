@@ -19,7 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import eigensolver, graph, rb, streaming
-from repro.core.kmeans import kmeans as _kmeans, row_normalize
+from repro.core.kmeans import (
+    kmeans as _kmeans, row_normalize, row_normalize_chunks, streaming_kmeans,
+)
 from repro.utils import StageTimer, fold_key
 
 
@@ -41,8 +43,14 @@ class SCRBConfig:
     chunk_size: Optional[int] = None
     # ^ rows of Z resident on device at once. None → single-shot path
     #   (bit-identical to the pre-streaming pipeline); an int bounds peak
-    #   device residency of the ELL matrix to O(chunk_size · R) and streams
-    #   host-resident chunks through every stage (requires solver="lobpcg").
+    #   device residency to O(chunk_size · (R + K)) and streams host-resident
+    #   chunks through every stage — RB features, degrees, the chunked LOBPCG
+    #   embedding, row normalization, and streaming k-means (labels included);
+    #   no stage allocates an O(N) device array (requires solver="lobpcg").
+    prefetch: bool = True
+    # ^ double-buffer H2D chunk uploads on the streaming path: the transfer
+    #   of chunk i+1 is issued before the chunk-i compute (bitwise-identical
+    #   results; only the overlap changes). Ignored when chunk_size is None.
 
 
 @dataclasses.dataclass
@@ -71,12 +79,20 @@ def _streaming_adjacency(x, cfg: SCRBConfig, key, timer: StageTimer):
                                                     impl=cfg.impl)
     with timer.stage("degrees"):
         adj = streaming.build_chunked_adjacency(
-            idx_chunks, d=params.n_features, d_g=d_g, impl=cfg.impl)
+            idx_chunks, d=params.n_features, d_g=d_g, impl=cfg.impl,
+            prefetch=cfg.prefetch)
     return adj, params
 
 
 def _sc_rb_streaming(x, cfg: SCRBConfig) -> SCRBResult:
-    """Algorithm 2 with O(chunk_size · R) peak ELL device residency."""
+    """Algorithm 2 out-of-core end to end: input rows to output labels.
+
+    Every stage streams host-resident row chunks — the chunked LOBPCG keeps
+    its block iterates on the host (``ChunkedDense``), row normalization and
+    k-means consume the embedding chunk-by-chunk, and the final labels are
+    emitted per chunk. No stage allocates an O(N) device array; peak device
+    residency is O(chunk_size · (R + K)) + the (D, K) mat-vec accumulator.
+    """
     if cfg.solver not in ("lobpcg", "lobpcg_host"):
         raise ValueError(
             f"chunk_size streaming requires solver='lobpcg' (host-driven "
@@ -90,20 +106,23 @@ def _sc_rb_streaming(x, cfg: SCRBConfig) -> SCRBResult:
 
     with timer.stage("svd"):
         eig = eigensolver.top_k_eigenpairs(
-            adj.gram_matvec, n, k, fold_key(key, "eig"),
+            adj.gram_matvec_chunked, n, k, fold_key(key, "eig"),
             solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
             buffer=cfg.solver_buffer, streaming=True,
+            chunk_sizes=adj.chunk_sizes,
         )
-        u = jax.block_until_ready(eig.vectors)
+        u = eig.vectors                       # ChunkedDense — host chunks
 
     with timer.stage("kmeans"):
-        u_hat = row_normalize(u)
-        res = _kmeans(
+        u_hat = row_normalize_chunks(u, prefetch=cfg.prefetch,
+                                     stats=adj.h2d_stats)
+        kmeans_steps = max(cfg.kmeans_iters, u_hat.n_chunks)
+        res = streaming_kmeans(
             fold_key(key, "kmeans"), u_hat, k,
-            n_iters=cfg.kmeans_iters, n_replicates=cfg.kmeans_replicates,
-            impl=cfg.impl,
+            n_steps=kmeans_steps, n_replicates=cfg.kmeans_replicates,
+            impl=cfg.impl, prefetch=cfg.prefetch, stats=adj.h2d_stats,
         )
-        labels = jax.block_until_ready(res.labels)
+        labels = res.labels                   # np (N,), assembled per chunk
 
     sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
     diagnostics = {
@@ -112,15 +131,24 @@ def _sc_rb_streaming(x, cfg: SCRBConfig) -> SCRBResult:
         "degrees_min": float(np.min(adj.deg)),
         "degrees_max": float(np.max(adj.deg)),
         "kmeans_inertia": float(res.inertia),
+        "kmeans_steps": kmeans_steps,
         "n_features_D": params.n_features,
         "nnz": n * cfg.n_grids,
         "n_chunks": adj.n_chunks,
         "chunk_rows_max": adj.max_chunk_rows,
         "ell_device_bytes_peak": adj.ell_device_bytes_peak,
+        # widest dense chunk on device: the (chunk, k+buffer) LOBPCG block
+        "embedding_device_bytes_peak": adj.max_chunk_rows * 4
+        * eigensolver.lobpcg_block_width(n, k, cfg.solver_buffer),
+        # measured: largest single H2D upload issued by any chunk sweep
+        # (degrees, LOBPCG mat-vecs, row normalize, k-means) — the runtime
+        # cross-check that no sweep streamed an O(N) item
+        "h2d_max_chunk_bytes": adj.h2d_stats.get("max_item_bytes", 0),
+        "prefetch": cfg.prefetch,
     }
     return SCRBResult(
         labels=np.asarray(labels),
-        embedding=np.asarray(u_hat),
+        embedding=u_hat.to_array(),
         singular_values=sigmas,
         timer=timer,
         diagnostics=diagnostics,
@@ -206,11 +234,17 @@ def spectral_embed(
     if cfg.chunk_size is not None:
         adj, _ = _streaming_adjacency(x, cfg, key, StageTimer())
         eig = eigensolver.top_k_eigenpairs(
-            adj.gram_matvec, adj.n, cfg.n_clusters, fold_key(key, "eig"),
-            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+            adj.gram_matvec_chunked, adj.n, cfg.n_clusters,
+            fold_key(key, "eig"), solver=cfg.solver,
+            max_iters=cfg.solver_iters, tol=cfg.solver_tol,
             buffer=cfg.solver_buffer, streaming=True,
+            chunk_sizes=adj.chunk_sizes,
         )
-        return row_normalize(eig.vectors), jnp.sqrt(jnp.maximum(eig.theta, 0.0))
+        # the caller asked for the embedding as an array — materialize the
+        # host chunks here, at the API boundary, not inside the pipeline
+        u_hat = row_normalize_chunks(eig.vectors, prefetch=cfg.prefetch)
+        return (jnp.asarray(u_hat.to_array()),
+                jnp.sqrt(jnp.maximum(eig.theta, 0.0)))
     n, d = x.shape
     d_g = cfg.d_g or rb.suggest_d_g(x, cfg.sigma, key=fold_key(key, "probe"))
     params = rb.make_rb_params(fold_key(key, "rb"), cfg.n_grids, d, cfg.sigma, d_g)

@@ -15,9 +15,19 @@ matrix to ``O(chunk_size · R)`` while computing the paper's exact algorithm
     ``(D, K)`` accumulator; the eigensolver never sees more than one chunk of
     Z. Runs eagerly (host Python loop) so it pairs with
     ``eigensolver.lobpcg_host``, which drives the iteration outside jit.
+  - ``ChunkedDense``         — host-resident row chunks of a *dense* (N, K)
+    matrix (the spectral embedding): the output format of the chunked
+    LOBPCG (``eigensolver.lobpcg_host_chunked``) and the input format of
+    ``kmeans.streaming_kmeans``, so no stage of the streaming pipeline ever
+    allocates an O(N) device array.
   - ``chunked_zt_matmul`` / ``chunked_z_matmul`` — *traceable* ``lax.scan``
     variants of the same blocking for use inside jit/shard_map (the
     distributed path chunks within each row shard).
+
+All chunk sweeps upload through ``utils.prefetch_to_device`` — a
+double-buffered ``jax.device_put`` that issues the H2D copy of chunk i+1
+before the chunk-i compute, overlapping transfer with compute on
+accelerators (bitwise-identical results either way).
 
 Chunk boundaries never change results beyond fp summation order in the
 mat-vec accumulator; degrees are exactly chunk-invariant by construction.
@@ -33,6 +43,7 @@ import numpy as np
 
 from repro.core import graph, rb
 from repro.kernels import ops
+from repro.utils import prefetch_to_device
 
 
 def as_row_chunks(
@@ -59,6 +70,88 @@ def as_row_chunks(
 
 
 @dataclasses.dataclass(frozen=True)
+class ChunkedDense:
+    """Host-resident row chunks of a dense (N, K) matrix.
+
+    The streaming pipeline's interchange format for everything dense and
+    O(N)-tall: the LOBPCG block iterates, the Ritz/spectral embedding, and
+    the row-normalized k-means input. Only one chunk at a time is uploaded;
+    peak device residency is ``max_chunk_rows · K`` elements.
+    """
+
+    chunks: Tuple[np.ndarray, ...]    # each (rows_c, K) float32, host
+
+    @property
+    def n(self) -> int:
+        return sum(c.shape[0] for c in self.chunks)
+
+    @property
+    def k(self) -> int:
+        return self.chunks[0].shape[1]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.chunks)
+
+    @property
+    def chunk_sizes(self) -> Tuple[int, ...]:
+        return tuple(c.shape[0] for c in self.chunks)
+
+    @property
+    def max_chunk_rows(self) -> int:
+        return max(c.shape[0] for c in self.chunks)
+
+    @property
+    def device_bytes_peak(self) -> int:
+        """Peak device residency when streamed: one buffered chunk (2× when
+        prefetch double-buffering holds two chunks in flight)."""
+        return self.max_chunk_rows * self.k * 4
+
+    def to_array(self) -> np.ndarray:
+        """Materialize on host (the chunks stay the source of truth)."""
+        return np.concatenate(self.chunks, axis=0)
+
+    def take_cols(self, k: int) -> "ChunkedDense":
+        """First k columns, chunk-local (cheap host views)."""
+        return ChunkedDense(tuple(c[:, :k] for c in self.chunks))
+
+    def map_chunks(self, fn) -> "ChunkedDense":
+        return ChunkedDense(tuple(fn(c) for c in self.chunks))
+
+    @classmethod
+    def from_array(
+        cls,
+        x: "jax.Array | np.ndarray",
+        sizes: "Optional[int | Sequence[int]]" = None,
+    ) -> "ChunkedDense":
+        """Chunk a dense array; ``sizes`` is a chunk size or explicit row
+        counts (to align with an existing ``ChunkedELL`` chunking)."""
+        xs = np.asarray(x, np.float32)
+        if sizes is None or isinstance(sizes, int):
+            return cls(tuple(as_row_chunks(xs, sizes)))
+        out, start = [], 0
+        for s in sizes:
+            out.append(xs[start:start + s])
+            start += s
+        if start != xs.shape[0]:
+            raise ValueError(f"sizes sum to {start}, array has {xs.shape[0]} rows")
+        return cls(tuple(out))
+
+    @classmethod
+    def random_normal(
+        cls, key: jax.Array, sizes: Sequence[int], k: int
+    ) -> "ChunkedDense":
+        """Per-chunk standard-normal block, never materializing (N, k) on
+        device — each chunk gets an independent folded key."""
+        out = []
+        for i, s in enumerate(sizes):
+            out.append(np.asarray(
+                jax.random.normal(jax.random.fold_in(key, i), (s, k),
+                                  jnp.float32)))
+        return cls(tuple(out))
+
+
+@dataclasses.dataclass(frozen=True)
 class ChunkedELL:
     """Row-chunked Ẑ = D̂^{-1/2}·Z: host-resident ELL chunks + per-row scales.
 
@@ -72,6 +165,10 @@ class ChunkedELL:
     d_g: int
     impl: str = "auto"
     deg: Optional[np.ndarray] = None         # (N,) float32 (diagnostics)
+    prefetch: bool = True                    # double-buffer H2D chunk uploads
+    h2d_stats: dict = dataclasses.field(default_factory=dict, compare=False)
+    # ^ measured upload sizes (utils.prefetch_to_device), mutated in place
+    #   across sweeps — the runtime check behind the residency diagnostics
 
     @property
     def n(self) -> int:
@@ -90,37 +187,71 @@ class ChunkedELL:
         return max(c.shape[0] for c in self.idx_chunks)
 
     @property
+    def chunk_sizes(self) -> Tuple[int, ...]:
+        """Row counts per chunk — for building aligned ``ChunkedDense``."""
+        return tuple(c.shape[0] for c in self.idx_chunks)
+
+    @property
     def ell_device_bytes_peak(self) -> int:
-        """Peak device residency of the ELL matrix: one chunk at a time."""
+        """Peak device residency of the ELL matrix: one buffered chunk.
+
+        With ``prefetch=True`` double buffering keeps up to two chunks in
+        flight, so worst-case instantaneous residency is 2× this figure.
+        """
         return self.max_chunk_rows * self.r * 4
 
-    def _iter(self):
-        start = 0
-        for ic, sc in zip(self.idx_chunks, self.rowscale_chunks):
-            yield start, ic, sc
-            start += ic.shape[0]
+    def _stream(self, *extra_chunk_seqs):
+        """Prefetched (double-buffered) device iterator over aligned chunks
+        of (idx, rowscale, *extras); upload sizes land in ``h2d_stats``."""
+        return prefetch_to_device(
+            zip(self.idx_chunks, self.rowscale_chunks, *extra_chunk_seqs),
+            enabled=self.prefetch, stats=self.h2d_stats)
 
     def rmatmat(self, u: jax.Array) -> jax.Array:
         """Ẑᵀ u : (N, K) → (D, K), one (D, K) accumulator over row chunks."""
         q = jnp.zeros((self.d, u.shape[1]), jnp.float32)
-        for start, ic, sc in self._iter():
-            q = q + ops.zt_matmul(
-                jnp.asarray(ic), u[start:start + ic.shape[0]],
-                jnp.asarray(sc), self.d, d_g=self.d_g, impl=self.impl)
+        offsets = np.concatenate([[0], np.cumsum(self.chunk_sizes)])
+        # generator: slices of u materialize lazily, one (well, two with
+        # double buffering) at a time — not an extra full copy of u
+        u_rows = (u[offsets[i]:offsets[i + 1]] for i in range(self.n_chunks))
+        for ic, sc, uc in self._stream(u_rows):
+            q = q + ops.zt_matmul(ic, uc, sc, self.d, d_g=self.d_g,
+                                  impl=self.impl)
         return q
 
     def matmat(self, v: jax.Array) -> jax.Array:
         """Ẑ v : (D, K) → (N, K), computed chunk-by-chunk."""
         outs = [
-            ops.z_matmul(jnp.asarray(ic), v, jnp.asarray(sc),
-                         d_g=self.d_g, impl=self.impl)
-            for _, ic, sc in self._iter()
+            ops.z_matmul(ic, v, sc, d_g=self.d_g, impl=self.impl)
+            for ic, sc in self._stream()
         ]
         return jnp.concatenate(outs, axis=0)
 
     def gram_matvec(self, u: jax.Array) -> jax.Array:
         """(Ẑ Ẑᵀ) u — eager streaming operator for ``lobpcg_host``."""
         return self.matmat(self.rmatmat(u))
+
+    def gram_matvec_chunked(self, u: ChunkedDense) -> ChunkedDense:
+        """(Ẑ Ẑᵀ) u with host-chunked input *and* output.
+
+        The fully out-of-core Gram operator: device residency is one ELL
+        chunk + one u chunk + the (D, K) accumulator, regardless of N. The
+        chunking of ``u`` must align with the ELL chunking. Feeds
+        ``eigensolver.lobpcg_host_chunked``.
+        """
+        if u.chunk_sizes != self.chunk_sizes:
+            raise ValueError(
+                f"chunking mismatch: u has {u.chunk_sizes}, "
+                f"ELL has {self.chunk_sizes}")
+        q = jnp.zeros((self.d, u.k), jnp.float32)
+        for ic, sc, uc in self._stream(u.chunks):
+            q = q + ops.zt_matmul(ic, uc, sc, self.d, d_g=self.d_g,
+                                  impl=self.impl)
+        outs = [
+            np.asarray(ops.z_matmul(ic, q, sc, d_g=self.d_g, impl=self.impl))
+            for ic, sc in self._stream()
+        ]
+        return ChunkedDense(tuple(outs))
 
     @classmethod
     def from_dense(
@@ -132,13 +263,15 @@ class ChunkedELL:
         d: int,
         d_g: int,
         impl: str = "auto",
+        prefetch: bool = True,
     ) -> "ChunkedELL":
         """Chunk an existing (N, R) ELL matrix (tests / migration path)."""
         idx_np = np.asarray(idx)
         scale_np = np.asarray(rowscale, np.float32)
         ics = as_row_chunks(idx_np, chunk_size)
         scs = as_row_chunks(scale_np, chunk_size)
-        return cls(tuple(ics), tuple(scs), d=d, d_g=d_g, impl=impl)
+        return cls(tuple(ics), tuple(scs), d=d, d_g=d_g, impl=impl,
+                   prefetch=prefetch)
 
 
 def chunked_rb_transform(
@@ -160,28 +293,30 @@ def chunked_rb_transform(
 
 
 def chunked_bin_counts(
-    idx_chunks: Sequence[np.ndarray], *, d: int, d_g: int, impl: str = "auto"
+    idx_chunks: Sequence[np.ndarray], *, d: int, d_g: int, impl: str = "auto",
+    prefetch: bool = True, stats: Optional[dict] = None,
 ) -> jax.Array:
     """Global int32 bin occupancies Σ_c Z_cᵀ1 — exact for any chunking."""
     counts = jnp.zeros((d,), jnp.int32)
-    for ic in idx_chunks:
-        counts = counts + ops.bin_counts(jnp.asarray(ic), d=d, d_g=d_g,
-                                         impl=impl)
+    for ic in prefetch_to_device(idx_chunks, enabled=prefetch, stats=stats):
+        counts = counts + ops.bin_counts(ic, d=d, d_g=d_g, impl=impl)
     return counts
 
 
 def chunked_degrees(
-    idx_chunks: Sequence[np.ndarray], *, d: int, d_g: int, impl: str = "auto"
+    idx_chunks: Sequence[np.ndarray], *, d: int, d_g: int, impl: str = "auto",
+    prefetch: bool = True,
 ) -> np.ndarray:
     """Streaming two-pass degrees (Eq. 6): bit-identical for any chunking.
 
     Pass 1 accumulates integer bin counts (order-invariant); pass 2 reduces
     each row against the final counts, which is row-local.
     """
-    counts = chunked_bin_counts(idx_chunks, d=d, d_g=d_g, impl=impl)
+    counts = chunked_bin_counts(idx_chunks, d=d, d_g=d_g, impl=impl,
+                                prefetch=prefetch)
     degs = [
-        np.asarray(graph.degrees_from_counts(jnp.asarray(ic), counts))
-        for ic in idx_chunks
+        np.asarray(graph.degrees_from_counts(ic, counts))
+        for ic in prefetch_to_device(idx_chunks, enabled=prefetch)
     ]
     return np.concatenate(degs)
 
@@ -193,21 +328,26 @@ def build_chunked_adjacency(
     d_g: int,
     impl: str = "auto",
     eps: float = 1e-8,
+    prefetch: bool = True,
 ) -> ChunkedELL:
     """Streaming analogue of ``graph.build_normalized_adjacency``."""
     idx_chunks = tuple(np.asarray(ic) for ic in idx_chunks)
-    counts = chunked_bin_counts(idx_chunks, d=d, d_g=d_g, impl=impl)
+    h2d_stats: dict = {}
+    counts = chunked_bin_counts(idx_chunks, d=d, d_g=d_g, impl=impl,
+                                prefetch=prefetch, stats=h2d_stats)
     r = np.float32(idx_chunks[0].shape[1])
     deg_chunks, scale_chunks = [], []
-    for ic in idx_chunks:
-        deg_c = np.asarray(graph.degrees_from_counts(jnp.asarray(ic), counts))
+    for ic in prefetch_to_device(idx_chunks, enabled=prefetch,
+                                 stats=h2d_stats):
+        deg_c = np.asarray(graph.degrees_from_counts(ic, counts))
         deg_chunks.append(deg_c)
         scale_chunks.append(
             (1.0 / np.sqrt(r * np.maximum(deg_c, np.float32(eps))))
             .astype(np.float32))
     return ChunkedELL(
         idx_chunks, tuple(scale_chunks), d=d, d_g=d_g, impl=impl,
-        deg=np.concatenate(deg_chunks))
+        deg=np.concatenate(deg_chunks), prefetch=prefetch,
+        h2d_stats=h2d_stats)
 
 
 # --------------------------------------------------------------------------

@@ -266,6 +266,25 @@ def kmeans_assign(
     return labels[:n], dists[:n]
 
 
+def kmeans_assign_stats(
+    x: jax.Array, centroids: jax.Array, *, impl: str = "auto"
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused per-batch k-means statistics for streaming/mini-batch updates.
+
+    One assignment pass (routed through the Pallas/XLA kernel) plus the
+    segment reductions every Sculley-style update needs:
+    ``(labels (N,), counts (k,), sums (k, d), inertia scalar)``. Keeping the
+    reduction fused with the assignment means a streamed chunk is uploaded
+    once and only O(k·d) statistics leave the device.
+    """
+    labels, dists = kmeans_assign(x, centroids, impl=impl)
+    k = centroids.shape[0]
+    counts = jax.ops.segment_sum(
+        jnp.ones(x.shape[:1], jnp.float32), labels, num_segments=k)
+    sums = jax.ops.segment_sum(x.astype(jnp.float32), labels, num_segments=k)
+    return labels, counts, sums, jnp.sum(dists)
+
+
 # --------------------------------------------------------------------------
 # flash attention (forward) — serving/prefill deployment path
 # --------------------------------------------------------------------------

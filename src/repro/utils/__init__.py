@@ -78,6 +78,53 @@ def asdict_shallow(obj: Any) -> Dict[str, Any]:
     raise TypeError(f"not a dataclass: {obj!r}")
 
 
+def prefetch_to_device(
+    items: Any, *, enabled: bool = True, stats: "Dict[str, int] | None" = None
+) -> Iterator[Any]:
+    """Double-buffered H2D upload of an iterable of host pytrees.
+
+    Yields each item with its leaves moved to device via ``jax.device_put``.
+    With ``enabled=True`` the transfer for item ``i+1`` is *issued before*
+    item ``i`` is handed to the consumer, so (on accelerators with async
+    transfer engines) the upload of the next chunk overlaps the compute on
+    the current one — note this keeps up to *two* chunks in flight, so
+    worst-case instantaneous residency is 2× one chunk. ``enabled=False``
+    uploads lazily at consume time — same values, same accumulation order,
+    so results are bitwise identical either way; only the transfer/compute
+    overlap changes.
+
+    ``stats`` (optional dict) is updated in place with the *measured* upload
+    sizes — ``max_item_bytes`` (largest single pytree uploaded) and
+    ``items`` — so residency diagnostics can report what was actually
+    streamed rather than a closed-form estimate.
+
+    Shared by every chunk sweep in the streaming pipeline: the degree pass,
+    the blocked Gram mat-vecs inside the LOBPCG loop, and the streaming
+    k-means sweeps.
+    """
+    def put(t):
+        if stats is not None:
+            stats["max_item_bytes"] = max(stats.get("max_item_bytes", 0),
+                                          tree_bytes(t))
+            stats["items"] = stats.get("items", 0) + 1
+        return jax.tree_util.tree_map(jax.device_put, t)
+
+    it = iter(items)
+    if not enabled:
+        for item in it:
+            yield put(item)
+        return
+    try:
+        cur = put(next(it))
+    except StopIteration:
+        return
+    for item in it:
+        nxt = put(item)     # issue H2D for i+1 before the consumer sees i
+        yield cur
+        cur = nxt
+    yield cur
+
+
 def shard_map_compat(f, *, mesh, in_specs, out_specs, check_vma=False):
     """``jax.shard_map`` across jax versions.
 

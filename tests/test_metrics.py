@@ -46,6 +46,19 @@ def test_rand_index_known_value():
     assert metrics.rand_index(y_pred, y_true) == pytest.approx(agree / total)
 
 
+def test_adjusted_rand_index_extremes():
+    y = np.array([0, 0, 1, 1, 2, 2])
+    assert metrics.adjusted_rand_index(y, y) == pytest.approx(1.0)
+    perm = np.array([2, 2, 0, 0, 1, 1])            # relabel-invariant
+    assert metrics.adjusted_rand_index(perm, y) == pytest.approx(1.0)
+    rng = np.random.default_rng(0)
+    y_true = np.repeat(np.arange(8), 300)
+    y_rand = rng.integers(0, 8, size=y_true.size)
+    # chance-corrected: random labelings score ≈ 0 (unlike the raw RI)
+    assert abs(metrics.adjusted_rand_index(y_rand, y_true)) < 0.02
+    assert metrics.rand_index(y_rand, y_true) > 0.5
+
+
 def test_accuracy_hungarian_nontrivial():
     # predicted cluster 0 mostly maps to true 1 and vice versa
     y_true = np.array([0, 0, 0, 1, 1, 1])
