@@ -17,13 +17,18 @@ This cell sweeps N with a fixed ``chunk_size`` and reports:
 
 ``--gate`` turns the report into a CI check (the ``bench-smoke`` job): exit
 non-zero if the runtime slope exceeds ``--max-slope`` or if either residency
-series grows with N on the chunked path. The JSON written to ``--out`` is
-uploaded as the ``BENCH_PR.json`` artifact.
+series grows with N on the chunked path. ``--mesh-gate`` additionally runs
+one mesh plan on forced CPU devices (subprocess — the XLA device-count flag
+must precede jax init) and asserts the distributed k-means stage's peak
+device residency is O(shard_chunk), not O(N/shards). The JSON written to
+``--out`` is uploaded as the ``BENCH_PR.json`` artifact.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 
 import jax.numpy as jnp
@@ -32,7 +37,7 @@ import numpy as np
 from repro.core import SCRBConfig, metrics, sc_rb
 from repro.data.synthetic import make_rings
 
-STAGES = ("rb_features", "degrees", "svd", "kmeans")
+STAGES = ("rb_features", "degrees", "svd", "normalize", "kmeans")
 
 
 def run(ns=(1_000, 2_000, 4_000, 8_000, 16_000), chunk_size: int = 1_024,
@@ -119,6 +124,90 @@ def run(ns=(1_000, 2_000, 4_000, 8_000, 16_000), chunk_size: int = 1_024,
     return out
 
 
+_MESH_CHILD = r"""
+import os, sys, json
+params = json.loads(sys.argv[1])
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=%d"
+                           % params["devices"])
+os.environ.setdefault("JAX_PLATFORM_NAME", "cpu")
+import jax.numpy as jnp
+from repro.core import SCRBConfig, executor, metrics, sc_rb
+from repro.data.synthetic import make_rings
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh()
+x, y = make_rings(params["n"], 2, seed=params["seed"])
+base = dict(n_clusters=2, n_grids=params["rank"], sigma=0.15,
+            kmeans_replicates=4, seed=params["seed"], solver_tol=1e-4)
+ref = sc_rb(jnp.asarray(x), SCRBConfig(**base))
+cfg = SCRBConfig(**base, chunk_size=params["chunk"])
+res = executor.execute(x, cfg, executor.plan_from_config(cfg, mesh=mesh),
+                       keep_embedding=False)
+print(json.dumps({
+    "devices": params["devices"],
+    "n": params["n"],
+    "chunk_size": params["chunk"],
+    "label_ari_vs_single_shot": metrics.adjusted_rand_index(res.labels,
+                                                            ref.labels),
+    "stages": {k: v for k, v in res.timer.times.items()},
+    "diag": {k: v for k, v in res.diagnostics.items()
+             if isinstance(v, (int, float)) or k == "plan"},
+}))
+"""
+
+
+def run_mesh(n: int = 4_096, chunk: int = 512, rank: int = 64,
+             devices: int = 2, seed: int = 0) -> dict:
+    """One mesh plan (chunked-within-shard) on forced CPU devices.
+
+    Runs in a subprocess because the XLA device-count flag must be set
+    before jax initializes and must not leak into the parent sweep.
+    """
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    params = json.dumps(dict(n=n, chunk=chunk, rank=rank, devices=devices,
+                             seed=seed))
+    out = subprocess.run([sys.executable, "-c", _MESH_CHILD, params],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    if out.returncode != 0:
+        raise RuntimeError(f"mesh child failed:\n{out.stderr[-2000:]}")
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    d = res["diag"]
+    print(f"[fig6] mesh plan ({devices} dev, N={n}, chunk={chunk}): "
+          f"ARI vs single-shot {res['label_ari_vs_single_shot']:.3f}, "
+          f"kmeans peak {d['kmeans_device_bytes_peak']}B per device "
+          f"(one shard would be {d['kmeans_single_shard_bytes']}B)")
+    return res
+
+
+def gate_mesh(mesh_out: dict) -> list[str]:
+    """CI conditions for the mesh plan: the distributed k-means must consume
+    the embedding shard-chunk-wise — O(shard_chunk) peak device residency,
+    not O(N/shards) — and still reproduce the single-shot labels."""
+    failures = []
+    d = mesh_out["diag"]
+    chunk, shard = d["kmeans_chunk_rows"], d["kmeans_shard_rows"]
+    if chunk != min(mesh_out["chunk_size"], shard):
+        failures.append(
+            f"mesh k-means chunk rows {chunk} != plan chunk "
+            f"{mesh_out['chunk_size']} (shard={shard})")
+    if shard > chunk and not (
+            d["kmeans_device_bytes_peak"] < d["kmeans_single_shard_bytes"]):
+        failures.append(
+            f"mesh k-means peak residency {d['kmeans_device_bytes_peak']}B is "
+            f"not below the O(N/shards) figure "
+            f"{d['kmeans_single_shard_bytes']}B — the distributed k-means is "
+            f"gathering shard-sized state again")
+    if mesh_out["label_ari_vs_single_shot"] < 0.95:
+        failures.append(
+            f"mesh plan vs single-shot label ARI "
+            f"{mesh_out['label_ari_vs_single_shot']:.3f} < 0.95")
+    return failures
+
+
 def gate(out: dict, max_slope: float = 1.25) -> list[str]:
     """CI pass/fail conditions for the streaming path (bench-smoke job)."""
     failures = []
@@ -155,15 +244,24 @@ def main() -> None:
                     help="exit non-zero if slope/residency/parity regress")
     ap.add_argument("--max-slope", type=float, default=1.25)
     ap.add_argument("--no-prefetch-sweep", action="store_true")
+    ap.add_argument("--mesh-gate", action="store_true",
+                    help="also run one mesh plan on forced CPU devices and "
+                         "gate the distributed k-means residency")
+    ap.add_argument("--mesh-devices", type=int, default=2)
+    ap.add_argument("--mesh-n", type=int, default=4_096)
+    ap.add_argument("--mesh-chunk", type=int, default=512)
     args = ap.parse_args()
     ns = [n for n in (1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000)
           if n <= args.max_n]
     res = run(ns=tuple(ns), chunk_size=args.chunk_size, rank=args.rank,
               prefetch_sweep=not args.no_prefetch_sweep)
-    import os
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
     failures = gate(res, max_slope=args.max_slope)
+    if args.mesh_gate:
+        res["mesh"] = run_mesh(n=args.mesh_n, chunk=args.mesh_chunk,
+                               rank=args.rank, devices=args.mesh_devices)
+        failures += gate_mesh(res["mesh"])
     res["gate_failures"] = failures
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1)

@@ -30,5 +30,13 @@ from repro.core.kmeans import (  # noqa: F401
     KMeansResult, kmeans, minibatch_kmeans, row_normalize,
     row_normalize_chunks, streaming_kmeans,
 )
-from repro.core.pipeline import SCRBConfig, SCRBResult, sc_rb, spectral_embed  # noqa: F401
+from repro.core.executor import (  # noqa: F401
+    ExecutionPlan, execute, plan_from_config,
+)
+from repro.core.rowmatrix import (  # noqa: F401
+    DeviceRows, HostChunkedRows, MeshRows, RowMatrix,
+)
+from repro.core.pipeline import (  # noqa: F401
+    SCRBConfig, SCRBResult, SpectralEmbedding, sc_rb, spectral_embed,
+)
 from repro.core import baselines, metrics  # noqa: F401

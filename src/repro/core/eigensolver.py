@@ -9,6 +9,14 @@ exit. Everything inside is dense GEMMs → MXU.
 ``lanczos`` (full-reorth symmetric Lanczos — the "Matlab svds" stand-in of
 Fig. 3) and ``subspace_iteration`` (block power method) are the comparison
 baselines for the paper's solver study.
+
+Three LOBPCG drivers back the executor's eigensolve stage, one per data
+representation (``repro.core.rowmatrix``): ``lobpcg`` (device-resident
+``lax.while_loop`` — also the jitted body of the mesh placement),
+``lobpcg_host`` (host-driven loop over an eager streaming mat-vec), and
+``lobpcg_host_chunked`` (block iterates live as host row chunks;
+``top_k_eigenpairs(chunk_sizes=...)`` selects it). All share the residual /
+Rayleigh–Ritz math.
 """
 from __future__ import annotations
 

@@ -1,0 +1,228 @@
+"""Plan-based stage-graph executor for SC_RB (the paper's Algorithm 2).
+
+The five stages —
+
+  1. Z  ← RB features of X          (Alg. 1, hashed ELL)          O(NRd)
+  2. D̂ ← Z(Zᵀ1); Ẑ = D̂^{-1/2} Z    (Eq. 6)                       O(NR)
+  3. U  ← top-K left singular vecs of Ẑ (blocked LOBPCG)          O(KNRm)
+  4. Û ← row-normalize(U)
+  5. labels ← k-means(Û, K)                                        O(NK²t)
+
+— are written once here against the ``repro.core.rowmatrix`` protocol; an
+``ExecutionPlan`` selects the data representation per run:
+
+  placement  ``single`` | ``mesh``          (one device vs SPMD row shards)
+  residency  ``device`` | ``host_chunked``  (whole arrays on device vs
+             row-chunk streaming; under ``mesh`` placement, ``host_chunked``
+             means within-shard chunk scans bounding per-device working
+             sets to O(chunk))
+
+plus the orthogonal knobs ``prefetch`` (double-buffered H2D uploads),
+``impl`` (pallas/xla kernel dispatch), ``collective_compress`` (bf16 psum
+payload on the mesh) and ``block_rows`` (per-op Pallas row-tile caps).
+
+The public entry points — ``pipeline.sc_rb``, ``pipeline.spectral_embed``,
+``distributed.sc_rb_distributed`` — are thin wrappers that build a plan from
+an ``SCRBConfig`` and call :func:`execute`. Guarantees preserved from the
+hand-written pipelines: ``chunk_size=None`` single-device runs are
+bit-identical to the seed single-shot path (same ops, same order, same
+keys), and the streaming two-pass degrees are integer-exact for any
+chunking.
+
+Plan-selection guide (also in README): chunk (``residency="host_chunked"``)
+when the (N, R) ELL matrix or the (N, K) embedding does not fit one
+device; shard (``placement="mesh"``) when you have devices to spread rows
+over; do both when each shard is still bigger than you want resident —
+chunked-within-shard sweeps keep per-device temporaries O(chunk) while the
+only cross-device traffic stays the (D, K) psum per mat-vec and the O(K·dim)
+k-means statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+import jax
+import numpy as np
+
+from repro.core import rowmatrix, streaming
+from repro.core.kmeans import row_normalize
+from repro.kernels import ops
+from repro.utils import StageTimer, fold_key
+
+
+@dataclasses.dataclass(frozen=True)
+class SCRBConfig:
+    n_clusters: int
+    n_grids: int = 256            # R
+    sigma: float = 1.0            # Laplacian kernel bandwidth
+    d_g: Optional[int] = None     # hashed features per grid (power of 2);
+                                  # None → auto-size from occupied-bin probe
+    solver: str = "lobpcg"        # lobpcg | lanczos | subspace
+    solver_iters: int = 300
+    solver_tol: float = 1e-4
+    solver_buffer: int = 4
+    kmeans_iters: int = 25
+    kmeans_replicates: int = 10
+    seed: int = 0
+    impl: str = "auto"            # kernel dispatch: auto | pallas | xla
+    chunk_size: Optional[int] = None
+    # ^ rows resident at once. None → whole-array residency (bit-identical
+    #   to the pre-streaming pipeline on a single device); an int selects
+    #   residency="host_chunked": on a single device every stage streams
+    #   host-resident row chunks (peak device residency O(chunk·(R+K)),
+    #   requires solver="lobpcg"); on a mesh it bounds every within-shard
+    #   sweep (Gram mat-vec and k-means stats) to O(chunk) working sets.
+    prefetch: bool = True
+    # ^ double-buffer H2D chunk uploads on the streaming path: the transfer
+    #   of chunk i+1 is issued before the chunk-i compute (bitwise-identical
+    #   results; only the overlap changes). Ignored when chunk_size is None.
+    block_rows: Optional[Mapping[str, int]] = None
+    # ^ per-op Pallas row-tile caps (keys of ops.DEFAULT_BLOCK_ROWS, e.g.
+    #   {"ell_spmm": 256}); None keeps the defaults. Applied to every kernel
+    #   dispatch of the run via ops.block_rows_overrides.
+
+
+@dataclasses.dataclass
+class SCRBResult:
+    labels: Optional[np.ndarray]  # (N,) int32; None when stages stop early
+    embedding: np.ndarray         # (N, K) row-normalized spectral embedding
+    singular_values: np.ndarray   # (K,) of Ẑ  (σ_i = sqrt(eigval of ẐẐᵀ))
+    timer: StageTimer
+    diagnostics: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Placement × residency (+ orthogonal knobs) for one SC_RB run.
+
+    See the module docstring for the plan-selection guide. Validation is
+    eager so a bad combination fails before any stage runs.
+    """
+
+    placement: str = "single"            # single | mesh
+    residency: str = "device"            # device | host_chunked
+    chunk_size: Optional[int] = None     # rows per chunk (host or in-shard)
+    prefetch: bool = True                # double-buffered H2D uploads
+    impl: str = "auto"                   # kernel dispatch: auto|pallas|xla
+    collective_compress: bool = False    # bf16 (D, K) psum payload on mesh
+    mesh: Optional[Any] = None           # jax.sharding.Mesh for placement=mesh
+    block_rows: Optional[Mapping[str, int]] = None
+
+    def __post_init__(self):
+        if self.placement not in ("single", "mesh"):
+            raise ValueError(f"unknown placement {self.placement!r}")
+        if self.residency not in ("device", "host_chunked"):
+            raise ValueError(f"unknown residency {self.residency!r}")
+        if self.placement == "mesh" and self.mesh is None:
+            raise ValueError("placement='mesh' requires a mesh")
+        if self.placement == "single" and self.mesh is not None:
+            raise ValueError("placement='single' must not carry a mesh")
+        if (self.residency == "host_chunked" and self.placement == "single"
+                and self.chunk_size is None):
+            raise ValueError("residency='host_chunked' requires chunk_size")
+
+
+_REPRESENTATIONS = {
+    ("single", "device"): rowmatrix.DeviceRows,
+    ("single", "host_chunked"): rowmatrix.HostChunkedRows,
+    ("mesh", "device"): rowmatrix.MeshRows,
+    ("mesh", "host_chunked"): rowmatrix.MeshRows,
+}
+
+
+def plan_from_config(config: SCRBConfig, mesh=None) -> ExecutionPlan:
+    """The config → plan mapping behind the three public entry points."""
+    if config.chunk_size is not None and mesh is None \
+            and config.solver not in ("lobpcg", "lobpcg_host"):
+        raise ValueError(
+            f"chunk_size streaming requires solver='lobpcg' (host-driven "
+            f"iteration), got {config.solver!r}")
+    return ExecutionPlan(
+        placement="mesh" if mesh is not None else "single",
+        residency="host_chunked" if config.chunk_size is not None
+        else "device",
+        chunk_size=config.chunk_size,
+        prefetch=config.prefetch,
+        impl=config.impl,
+        mesh=mesh,
+        block_rows=config.block_rows,
+    )
+
+
+def representation(plan: ExecutionPlan):
+    """The RowMatrix class a plan selects (exposed for tests/benchmarks)."""
+    return _REPRESENTATIONS[(plan.placement, plan.residency)]
+
+
+def execute(
+    x,
+    config: SCRBConfig,
+    plan: Optional[ExecutionPlan] = None,
+    *,
+    final_stage: str = "kmeans",
+    keep_embedding: bool = True,
+) -> SCRBResult:
+    """Run Algorithm 2 under a plan; every entry point goes through here.
+
+    ``final_stage="normalize"`` stops after stage 4 (the ``spectral_embed``
+    entry point) — labels are ``None`` and the k-means stage never runs.
+    ``keep_embedding=False`` skips materializing the (N, K) embedding into
+    the result (the distributed wrapper's default: the embedding stays
+    sharded/chunked and only the labels leave the run).
+    """
+    cfg = config
+    if plan is None:
+        plan = plan_from_config(cfg)
+    if final_stage not in ("normalize", "kmeans"):
+        raise ValueError(f"unknown final_stage {final_stage!r}")
+    rep_cls = _REPRESENTATIONS[(plan.placement, plan.residency)]
+    key = jax.random.PRNGKey(cfg.seed)
+    timer = StageTimer()
+    k = cfg.n_clusters
+
+    with ops.block_rows_overrides(plan.block_rows):
+        with timer.stage("rb_features"):
+            feats = rep_cls.rb_features(x, cfg, plan, key)
+        with timer.stage("degrees"):
+            z = rep_cls.from_features(feats, cfg, plan)
+        with timer.stage("svd"):
+            eig = z.eigenpairs(k, fold_key(key, "eig"), cfg)
+        with timer.stage("normalize"):
+            u_hat = z.map_row_chunks(row_normalize, eig.vectors)
+        km, cluster_diag = None, {}
+        if final_stage == "kmeans":
+            with timer.stage("kmeans"):
+                km, cluster_diag = z.cluster(fold_key(key, "kmeans"),
+                                             u_hat, cfg)
+
+    sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
+    deg_min, deg_max = z.degree_range()
+    diagnostics = {
+        "plan": {"placement": plan.placement, "residency": plan.residency,
+                 "chunk_size": plan.chunk_size, "prefetch": plan.prefetch,
+                 "impl": plan.impl},
+        "solver_iterations": int(eig.iterations),
+        "solver_resnorms": np.asarray(eig.resnorms),
+        "degrees_min": deg_min,
+        "degrees_max": deg_max,
+        "n_features_D": feats.params.n_features,
+        "nnz": z.n * cfg.n_grids,
+    }
+    diagnostics.update(z.residency_diagnostics(cfg))
+    diagnostics.update(cluster_diag)
+    if km is not None:
+        diagnostics["kmeans_inertia"] = float(km.inertia)
+
+    embedding = None
+    if keep_embedding:
+        embedding = (u_hat.to_array()
+                     if isinstance(u_hat, streaming.ChunkedDense)
+                     else np.asarray(u_hat))
+    return SCRBResult(
+        labels=None if km is None else np.asarray(km.labels),
+        embedding=embedding,
+        singular_values=sigmas,
+        timer=timer,
+        diagnostics=diagnostics,
+    )

@@ -3,6 +3,12 @@
 Matches the paper's protocol (Matlab kmeans, 10 replicates): best-of-r
 restarts by inertia. The assignment step routes through the fused Pallas /
 XLA kernel in ``repro.kernels.ops``.
+
+Three clustering drivers back the executor's k-means stage, one per data
+representation (``repro.core.rowmatrix``): ``kmeans`` (device-dense, bit-
+identical to the seed pipeline), ``streaming_kmeans`` (host-chunked), and
+``repro.core.distributed.distributed_kmeans`` (mesh-sharded, shard-chunk-
+wise — it reuses ``_plusplus_init`` pool seeding from here).
 """
 from __future__ import annotations
 

@@ -6,253 +6,67 @@
   4. Û ← row-normalize(U)
   5. labels ← k-means(Û, K)                                        O(NK²t)
 
-Each stage is timed independently (paper Fig. 4 reports the per-stage
-breakdown); total is linear in N and in R.
+The stages are implemented once in the plan-based executor
+(``repro.core.executor``); this module is the stable single-host API. An
+``SCRBConfig`` maps to an ``ExecutionPlan`` — ``chunk_size=None`` selects
+whole-array device residency (bit-identical to the seed single-shot
+pipeline), an int selects host-chunked streaming for out-of-core N; the
+SPMD entry point lives in ``repro.core.distributed``. Each stage is timed
+independently (paper Fig. 4 reports the per-stage breakdown); total is
+linear in N and in R.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core import eigensolver, graph, rb, streaming
-from repro.core.kmeans import (
-    kmeans as _kmeans, row_normalize, row_normalize_chunks, streaming_kmeans,
+# Re-exported from the executor so the public import surface is unchanged.
+from repro.core.executor import (  # noqa: F401
+    ExecutionPlan, SCRBConfig, SCRBResult, execute, plan_from_config,
 )
-from repro.utils import StageTimer, fold_key
-
-
-@dataclasses.dataclass(frozen=True)
-class SCRBConfig:
-    n_clusters: int
-    n_grids: int = 256            # R
-    sigma: float = 1.0            # Laplacian kernel bandwidth
-    d_g: Optional[int] = None     # hashed features per grid (power of 2);
-                                  # None → auto-size from occupied-bin probe
-    solver: str = "lobpcg"        # lobpcg | lanczos | subspace
-    solver_iters: int = 300
-    solver_tol: float = 1e-4
-    solver_buffer: int = 4
-    kmeans_iters: int = 25
-    kmeans_replicates: int = 10
-    seed: int = 0
-    impl: str = "auto"            # kernel dispatch: auto | pallas | xla
-    chunk_size: Optional[int] = None
-    # ^ rows of Z resident on device at once. None → single-shot path
-    #   (bit-identical to the pre-streaming pipeline); an int bounds peak
-    #   device residency to O(chunk_size · (R + K)) and streams host-resident
-    #   chunks through every stage — RB features, degrees, the chunked LOBPCG
-    #   embedding, row normalization, and streaming k-means (labels included);
-    #   no stage allocates an O(N) device array (requires solver="lobpcg").
-    prefetch: bool = True
-    # ^ double-buffer H2D chunk uploads on the streaming path: the transfer
-    #   of chunk i+1 is issued before the chunk-i compute (bitwise-identical
-    #   results; only the overlap changes). Ignored when chunk_size is None.
-
-
-@dataclasses.dataclass
-class SCRBResult:
-    labels: np.ndarray            # (N,) int32
-    embedding: np.ndarray         # (N, K) row-normalized spectral embedding
-    singular_values: np.ndarray   # (K,) of Ẑ  (σ_i = sqrt(eigval of ẐẐᵀ))
-    timer: StageTimer
-    diagnostics: dict
-
-
-def _streaming_adjacency(x, cfg: SCRBConfig, key, timer: StageTimer):
-    """Stages 1–2 of the streaming pipeline: chunked Alg. 1 + Eq. 6.
-
-    ``x`` may be an array or an already-chunked sequence of row blocks
-    (e.g. memory-mapped); nothing larger than one chunk reaches the device.
-    """
-    x_chunks = streaming.as_row_chunks(x, cfg.chunk_size)
-    dim = x_chunks[0].shape[1]
-    with timer.stage("rb_features"):
-        d_g = cfg.d_g or rb.suggest_d_g(x_chunks, cfg.sigma,
-                                        key=fold_key(key, "probe"))
-        params = rb.make_rb_params(
-            fold_key(key, "rb"), cfg.n_grids, dim, cfg.sigma, d_g)
-        idx_chunks = streaming.chunked_rb_transform(x_chunks, params,
-                                                    impl=cfg.impl)
-    with timer.stage("degrees"):
-        adj = streaming.build_chunked_adjacency(
-            idx_chunks, d=params.n_features, d_g=d_g, impl=cfg.impl,
-            prefetch=cfg.prefetch)
-    return adj, params
-
-
-def _sc_rb_streaming(x, cfg: SCRBConfig) -> SCRBResult:
-    """Algorithm 2 out-of-core end to end: input rows to output labels.
-
-    Every stage streams host-resident row chunks — the chunked LOBPCG keeps
-    its block iterates on the host (``ChunkedDense``), row normalization and
-    k-means consume the embedding chunk-by-chunk, and the final labels are
-    emitted per chunk. No stage allocates an O(N) device array; peak device
-    residency is O(chunk_size · (R + K)) + the (D, K) mat-vec accumulator.
-    """
-    if cfg.solver not in ("lobpcg", "lobpcg_host"):
-        raise ValueError(
-            f"chunk_size streaming requires solver='lobpcg' (host-driven "
-            f"iteration), got {cfg.solver!r}")
-    key = jax.random.PRNGKey(cfg.seed)
-    timer = StageTimer()
-    k = cfg.n_clusters
-
-    adj, params = _streaming_adjacency(x, cfg, key, timer)
-    n = adj.n
-
-    with timer.stage("svd"):
-        eig = eigensolver.top_k_eigenpairs(
-            adj.gram_matvec_chunked, n, k, fold_key(key, "eig"),
-            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-            buffer=cfg.solver_buffer, streaming=True,
-            chunk_sizes=adj.chunk_sizes,
-        )
-        u = eig.vectors                       # ChunkedDense — host chunks
-
-    with timer.stage("kmeans"):
-        u_hat = row_normalize_chunks(u, prefetch=cfg.prefetch,
-                                     stats=adj.h2d_stats)
-        kmeans_steps = max(cfg.kmeans_iters, u_hat.n_chunks)
-        res = streaming_kmeans(
-            fold_key(key, "kmeans"), u_hat, k,
-            n_steps=kmeans_steps, n_replicates=cfg.kmeans_replicates,
-            impl=cfg.impl, prefetch=cfg.prefetch, stats=adj.h2d_stats,
-        )
-        labels = res.labels                   # np (N,), assembled per chunk
-
-    sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
-    diagnostics = {
-        "solver_iterations": int(eig.iterations),
-        "solver_resnorms": np.asarray(eig.resnorms),
-        "degrees_min": float(np.min(adj.deg)),
-        "degrees_max": float(np.max(adj.deg)),
-        "kmeans_inertia": float(res.inertia),
-        "kmeans_steps": kmeans_steps,
-        "n_features_D": params.n_features,
-        "nnz": n * cfg.n_grids,
-        "n_chunks": adj.n_chunks,
-        "chunk_rows_max": adj.max_chunk_rows,
-        "ell_device_bytes_peak": adj.ell_device_bytes_peak,
-        # widest dense chunk on device: the (chunk, k+buffer) LOBPCG block
-        "embedding_device_bytes_peak": adj.max_chunk_rows * 4
-        * eigensolver.lobpcg_block_width(n, k, cfg.solver_buffer),
-        # measured: largest single H2D upload issued by any chunk sweep
-        # (degrees, LOBPCG mat-vecs, row normalize, k-means) — the runtime
-        # cross-check that no sweep streamed an O(N) item
-        "h2d_max_chunk_bytes": adj.h2d_stats.get("max_item_bytes", 0),
-        "prefetch": cfg.prefetch,
-    }
-    return SCRBResult(
-        labels=np.asarray(labels),
-        embedding=u_hat.to_array(),
-        singular_values=sigmas,
-        timer=timer,
-        diagnostics=diagnostics,
-    )
+from repro.utils import StageTimer
 
 
 def sc_rb(x: jax.Array, config: SCRBConfig) -> SCRBResult:
     """Run Algorithm 2 on a single host/device.
 
-    With ``config.chunk_size`` set, the ELL matrix is streamed in row chunks
-    (see ``repro.core.streaming``) — same algorithm, bounded device memory.
+    With ``config.chunk_size`` set, every stage streams host-resident row
+    chunks (see ``repro.core.rowmatrix.HostChunkedRows``) — same algorithm,
+    bounded device memory.
     """
-    if config.chunk_size is not None:
-        return _sc_rb_streaming(x, config)
-    cfg = config
-    key = jax.random.PRNGKey(cfg.seed)
-    timer = StageTimer()
-    n, d = x.shape
-    k = cfg.n_clusters
-
-    # -- stage 1: RB feature generation (Alg. 1) --------------------------
-    with timer.stage("rb_features"):
-        d_g = cfg.d_g or rb.suggest_d_g(x, cfg.sigma, key=fold_key(key, "probe"))
-        params = rb.make_rb_params(
-            fold_key(key, "rb"), cfg.n_grids, d, cfg.sigma, d_g)
-        idx = jax.block_until_ready(rb.rb_transform(x, params, impl=cfg.impl))
-
-    # -- stage 2: degrees + normalized operator (Eq. 6) -------------------
-    with timer.stage("degrees"):
-        adj = graph.build_normalized_adjacency(
-            idx, d=params.n_features, d_g=d_g, impl=cfg.impl)
-        jax.block_until_ready(adj.rowscale)
-
-    # -- stage 3: top-K singular vectors of Ẑ via eigensolver -------------
-    with timer.stage("svd"):
-        eig = eigensolver.top_k_eigenpairs(
-            adj.gram_matvec, n, k, fold_key(key, "eig"),
-            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-            buffer=cfg.solver_buffer,
-        )
-        u = jax.block_until_ready(eig.vectors)
-
-    # -- stage 4+5: row-normalize + k-means --------------------------------
-    with timer.stage("kmeans"):
-        u_hat = row_normalize(u)
-        res = _kmeans(
-            fold_key(key, "kmeans"), u_hat, k,
-            n_iters=cfg.kmeans_iters, n_replicates=cfg.kmeans_replicates,
-            impl=cfg.impl,
-        )
-        labels = jax.block_until_ready(res.labels)
-
-    sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
-    diagnostics = {
-        "solver_iterations": int(eig.iterations),
-        "solver_resnorms": np.asarray(eig.resnorms),
-        "degrees_min": float(jnp.min(adj.deg)),
-        "degrees_max": float(jnp.max(adj.deg)),
-        "kmeans_inertia": float(res.inertia),
-        "n_features_D": params.n_features,
-        "nnz": n * cfg.n_grids,
-    }
-    return SCRBResult(
-        labels=np.asarray(labels),
-        embedding=np.asarray(u_hat),
-        singular_values=sigmas,
-        timer=timer,
-        diagnostics=diagnostics,
-    )
+    return execute(x, config, plan_from_config(config))
 
 
-def spectral_embed(
-    x: jax.Array, config: SCRBConfig
-) -> tuple[jax.Array, jax.Array]:
-    """Stages 1–4 only: (row-normalized embedding, singular values).
+@dataclasses.dataclass
+class SpectralEmbedding:
+    """Stages 1–4 output. Iterates as the historical ``(embedding,
+    singular_values)`` pair; per-stage timings ride along in ``timer``."""
+
+    embedding: jax.Array          # (N, K) row-normalized
+    singular_values: jax.Array    # (K,)
+    timer: StageTimer
+
+    def __iter__(self):
+        yield self.embedding
+        yield self.singular_values
+
+
+def spectral_embed(x: jax.Array, config: SCRBConfig) -> SpectralEmbedding:
+    """Stages 1–4 only: row-normalized embedding + singular values.
 
     Exposed for framework integration (e.g. clustering LM representations
     where a downstream consumer wants the embedding, not the labels).
-    Honors ``config.chunk_size`` like ``sc_rb``.
+    Honors ``config.chunk_size`` like ``sc_rb`` — it is the same executor
+    run stopped after the normalize stage, so it now reports the same
+    per-stage timings. The result unpacks as ``(embedding, singular_values)``
+    for backwards compatibility.
     """
-    cfg = config
-    key = jax.random.PRNGKey(cfg.seed)
-    if cfg.chunk_size is not None:
-        adj, _ = _streaming_adjacency(x, cfg, key, StageTimer())
-        eig = eigensolver.top_k_eigenpairs(
-            adj.gram_matvec_chunked, adj.n, cfg.n_clusters,
-            fold_key(key, "eig"), solver=cfg.solver,
-            max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-            buffer=cfg.solver_buffer, streaming=True,
-            chunk_sizes=adj.chunk_sizes,
-        )
-        # the caller asked for the embedding as an array — materialize the
-        # host chunks here, at the API boundary, not inside the pipeline
-        u_hat = row_normalize_chunks(eig.vectors, prefetch=cfg.prefetch)
-        return (jnp.asarray(u_hat.to_array()),
-                jnp.sqrt(jnp.maximum(eig.theta, 0.0)))
-    n, d = x.shape
-    d_g = cfg.d_g or rb.suggest_d_g(x, cfg.sigma, key=fold_key(key, "probe"))
-    params = rb.make_rb_params(fold_key(key, "rb"), cfg.n_grids, d, cfg.sigma, d_g)
-    idx = rb.rb_transform(x, params, impl=cfg.impl)
-    adj = graph.build_normalized_adjacency(idx, d=params.n_features, d_g=d_g, impl=cfg.impl)
-    eig = eigensolver.top_k_eigenpairs(
-        adj.gram_matvec, n, cfg.n_clusters, fold_key(key, "eig"),
-        solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-        buffer=cfg.solver_buffer,
+    res = execute(x, config, plan_from_config(config),
+                  final_stage="normalize")
+    return SpectralEmbedding(
+        jnp.asarray(res.embedding),
+        jnp.asarray(res.singular_values),
+        res.timer,
     )
-    return row_normalize(eig.vectors), jnp.sqrt(jnp.maximum(eig.theta, 0.0))

@@ -1,0 +1,438 @@
+"""RowMatrix — the data-representation layer of the plan-based executor.
+
+Algorithm 2's five stages (RB features, degrees, eigensolve, row-normalize,
+k-means) are written ONCE in ``repro.core.executor`` against the protocol
+below; what used to be three hand-written pipelines (single-shot, host-
+chunked streaming, SPMD) is now three *representations* of the same
+row-partitioned operand Ẑ = D̂^{-1/2}Z:
+
+  - ``DeviceRows``      — the whole (N, R) ELL matrix on one device
+    (``graph.NormalizedAdjacency``); tall dense operands are plain arrays.
+  - ``HostChunkedRows`` — host-resident row chunks (``streaming.ChunkedELL``);
+    tall dense operands are ``streaming.ChunkedDense`` and every sweep
+    uploads one prefetched chunk at a time.
+  - ``MeshRows``        — rows sharded over the mesh's data axes; mat-vecs
+    run under ``shard_map`` with one (D, K) psum, and with a plan
+    ``chunk_size`` every within-shard sweep is a ``lax.scan`` over row
+    chunks, bounding per-device working sets to O(chunk) regardless of the
+    shard size (the streaming × distributed composition).
+
+Each representation implements the same small surface —
+
+  ``matvec``/``rmatvec``/``gram``  the Ẑ / Ẑᵀ / ẐẐᵀ products,
+  ``map_row_chunks(fn, *tall)``    apply a row-local fn chunk-by-chunk,
+  ``reduce(fn, init, *tall)``      fold an additive accumulator over row
+                                   chunks (init must be the identity, e.g.
+                                   zeros: mesh placement psums the final
+                                   accumulator across shards),
+  ``eigenpairs`` / ``cluster``     the solver/k-means drivers that match the
+                                   representation's residency,
+
+— so an ``ExecutionPlan`` (placement × residency) picks a representation and
+the executor never branches on where the data lives. Combinations that used
+to fall between the hand-written paths (e.g. chunked-within-shard k-means)
+are just plan points here.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import eigensolver, graph, rb, streaming
+from repro.core.kmeans import kmeans as _kmeans, streaming_kmeans
+from repro.kernels import ops
+from repro.utils import fold_key, prefetch_to_device
+
+
+@dataclasses.dataclass(frozen=True)
+class RBFeatures:
+    """Stage-1 output: RB grid parameters + the representation's ELL payload
+    (device idx / host idx chunks / sharded idx)."""
+
+    params: rb.RBParams
+    d_g: int
+    payload: Any
+
+
+@runtime_checkable
+class RowMatrix(Protocol):
+    """A row-partitioned Ẑ with representation-specific residency/placement.
+
+    ``tall`` operands (the (N, K) block iterates / embedding) use the
+    representation's native tall type: ``jax.Array`` (device), ``ChunkedDense``
+    (host chunks), or a row-sharded ``jax.Array`` (mesh).
+    """
+
+    kind: str
+
+    @property
+    def n(self) -> int: ...
+    def degree_range(self) -> Tuple[float, float]: ...
+    def matvec(self, v): ...          # Ẑ v : (D, K) → tall
+    def rmatvec(self, u): ...         # Ẑᵀ u : tall → (D, K)
+    def gram(self, u): ...            # (Ẑ Ẑᵀ) u : tall → tall
+    def map_row_chunks(self, fn: Callable, *tall): ...
+    def reduce(self, fn: Callable, init, *tall): ...
+    def eigenpairs(self, k: int, key: jax.Array, cfg) -> eigensolver.EigResult: ...
+    def cluster(self, key: jax.Array, u_hat, cfg) -> Tuple[Any, dict]: ...
+
+
+# --------------------------------------------------------------------------
+# Single device, device residency — the seed pipeline's representation.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceRows:
+    """Whole-array residency on one device (bit-identical to the seed
+    single-shot pipeline: same ops, same order, same keys)."""
+
+    kind = "device"
+    adj: graph.NormalizedAdjacency
+
+    @classmethod
+    def rb_features(cls, x, cfg, plan, key) -> RBFeatures:
+        x = jnp.asarray(x)
+        d_g = cfg.d_g or rb.suggest_d_g(x, cfg.sigma, key=fold_key(key, "probe"))
+        params = rb.make_rb_params(
+            fold_key(key, "rb"), cfg.n_grids, x.shape[1], cfg.sigma, d_g)
+        idx = jax.block_until_ready(rb.rb_transform(x, params, impl=plan.impl))
+        return RBFeatures(params, d_g, idx)
+
+    @classmethod
+    def from_features(cls, feats: RBFeatures, cfg, plan) -> "DeviceRows":
+        adj = graph.build_normalized_adjacency(
+            feats.payload, d=feats.params.n_features, d_g=feats.d_g,
+            impl=plan.impl)
+        jax.block_until_ready(adj.rowscale)
+        return cls(adj)
+
+    @property
+    def n(self) -> int:
+        return self.adj.n
+
+    @property
+    def deg(self) -> np.ndarray:
+        return np.asarray(self.adj.deg)
+
+    def degree_range(self) -> Tuple[float, float]:
+        return float(jnp.min(self.adj.deg)), float(jnp.max(self.adj.deg))
+
+    def matvec(self, v):
+        return self.adj.matmat(v)
+
+    def rmatvec(self, u):
+        return self.adj.rmatmat(u)
+
+    def gram(self, u):
+        return self.adj.gram_matvec(u)
+
+    def map_row_chunks(self, fn, *tall):
+        return fn(*tall)
+
+    def reduce(self, fn, init, *tall):
+        return fn(init, *tall)
+
+    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
+        eig = eigensolver.top_k_eigenpairs(
+            self.adj.gram_matvec, self.n, k, key,
+            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+            buffer=cfg.solver_buffer)
+        jax.block_until_ready(eig.vectors)
+        return eig
+
+    def cluster(self, key, u_hat, cfg) -> Tuple[Any, dict]:
+        res = _kmeans(key, u_hat, cfg.n_clusters, n_iters=cfg.kmeans_iters,
+                      n_replicates=cfg.kmeans_replicates, impl=cfg.impl)
+        jax.block_until_ready(res.labels)
+        return res, {}
+
+    def residency_diagnostics(self, cfg) -> dict:
+        return {}
+
+
+# --------------------------------------------------------------------------
+# Single placement, host-chunked residency — the streaming representation.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HostChunkedRows:
+    """Host-resident row chunks; no stage allocates an O(N) device array."""
+
+    kind = "host_chunked"
+    ell: streaming.ChunkedELL
+
+    @classmethod
+    def rb_features(cls, x, cfg, plan, key) -> RBFeatures:
+        x_chunks = streaming.as_row_chunks(x, plan.chunk_size)
+        dim = x_chunks[0].shape[1]
+        d_g = cfg.d_g or rb.suggest_d_g(x_chunks, cfg.sigma,
+                                        key=fold_key(key, "probe"))
+        params = rb.make_rb_params(
+            fold_key(key, "rb"), cfg.n_grids, dim, cfg.sigma, d_g)
+        idx_chunks = streaming.chunked_rb_transform(x_chunks, params,
+                                                    impl=plan.impl)
+        return RBFeatures(params, d_g, idx_chunks)
+
+    @classmethod
+    def from_features(cls, feats: RBFeatures, cfg, plan) -> "HostChunkedRows":
+        ell = streaming.build_chunked_adjacency(
+            feats.payload, d=feats.params.n_features, d_g=feats.d_g,
+            impl=plan.impl, prefetch=plan.prefetch)
+        return cls(ell)
+
+    @property
+    def n(self) -> int:
+        return self.ell.n
+
+    @property
+    def deg(self) -> np.ndarray:
+        return self.ell.deg
+
+    def degree_range(self) -> Tuple[float, float]:
+        return float(np.min(self.ell.deg)), float(np.max(self.ell.deg))
+
+    def matvec(self, v):
+        return self.ell.matmat(v)
+
+    def rmatvec(self, u):
+        return self.ell.rmatmat(u)
+
+    def gram(self, u):
+        if isinstance(u, streaming.ChunkedDense):
+            return self.ell.gram_matvec_chunked(u)
+        return self.ell.gram_matvec(u)
+
+    def _tall_chunks(self, tall):
+        if isinstance(tall, streaming.ChunkedDense):
+            return tall.chunks
+        return tall  # already a sequence of aligned host chunks
+
+    def map_row_chunks(self, fn, *tall):
+        seqs = [self._tall_chunks(t) for t in tall]
+        out = [
+            np.asarray(fn(*cs))
+            for cs in prefetch_to_device(zip(*seqs), enabled=self.ell.prefetch,
+                                         stats=self.ell.h2d_stats)
+        ]
+        return streaming.ChunkedDense(tuple(out))
+
+    def reduce(self, fn, init, *tall):
+        seqs = [self._tall_chunks(t) for t in tall]
+        acc = init
+        for cs in prefetch_to_device(zip(*seqs), enabled=self.ell.prefetch,
+                                     stats=self.ell.h2d_stats):
+            acc = fn(acc, *cs)
+        return acc
+
+    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
+        return eigensolver.top_k_eigenpairs(
+            self.ell.gram_matvec_chunked, self.n, k, key,
+            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+            buffer=cfg.solver_buffer, streaming=True,
+            chunk_sizes=self.ell.chunk_sizes)
+
+    def cluster(self, key, u_hat, cfg) -> Tuple[Any, dict]:
+        kmeans_steps = max(cfg.kmeans_iters, u_hat.n_chunks)
+        res = streaming_kmeans(
+            key, u_hat, cfg.n_clusters, n_steps=kmeans_steps,
+            n_replicates=cfg.kmeans_replicates, impl=cfg.impl,
+            prefetch=self.ell.prefetch, stats=self.ell.h2d_stats)
+        return res, {"kmeans_steps": kmeans_steps}
+
+    def residency_diagnostics(self, cfg) -> dict:
+        ell = self.ell
+        return {
+            "n_chunks": ell.n_chunks,
+            "chunk_rows_max": ell.max_chunk_rows,
+            "ell_device_bytes_peak": ell.ell_device_bytes_peak,
+            # widest dense chunk on device: the (chunk, k+buffer) LOBPCG block
+            "embedding_device_bytes_peak": ell.max_chunk_rows * 4
+            * eigensolver.lobpcg_block_width(
+                ell.n, cfg.n_clusters, cfg.solver_buffer),
+            # measured: largest single H2D upload issued by any chunk sweep
+            # (degrees, LOBPCG mat-vecs, row normalize, k-means) — the
+            # runtime cross-check that no sweep streamed an O(N) item
+            "h2d_max_chunk_bytes": ell.h2d_stats.get("max_item_bytes", 0),
+            "prefetch": ell.prefetch,
+        }
+
+
+# --------------------------------------------------------------------------
+# Mesh placement — rows sharded over the data axes; optional within-shard
+# chunking (residency="host_chunked" under placement="mesh").
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MeshRows:
+    """Row-sharded Ẑ on a device mesh, explicit collectives via shard_map.
+
+    ``chunk_size`` bounds every within-shard sweep (Gram mat-vec scans and
+    the k-means assignment/stats sweeps) to O(chunk)-sized working sets, so
+    streaming composes with sharding instead of being a separate pipeline.
+    """
+
+    kind = "mesh"
+    mesh: Any                     # jax.sharding.Mesh
+    idx: jax.Array                # (N, R) int32, row-sharded
+    rowscale: jax.Array           # (N,) float32, row-sharded
+    degrees: jax.Array            # (N,) float32, row-sharded
+    d: int
+    d_g: int
+    impl: str = "auto"
+    chunk_size: Optional[int] = None
+    compress: bool = False
+
+    @classmethod
+    def rb_features(cls, x, cfg, plan, key) -> RBFeatures:
+        mesh = plan.mesh
+        d_g = cfg.d_g or rb.suggest_d_g(np.asarray(x), cfg.sigma,
+                                        key=fold_key(key, "probe"))
+        params = rb.make_rb_params(
+            fold_key(key, "rb"), cfg.n_grids, np.asarray(x).shape[1],
+            cfg.sigma, d_g)
+        row_shard = cls._row_sharding(mesh)
+        xs = jax.device_put(jnp.asarray(x, jnp.float32), row_shard)
+        with mesh:
+            idx = jax.jit(
+                lambda a: rb.rb_transform(a, params, impl=plan.impl),
+                out_shardings=row_shard)(xs)
+            idx = jax.block_until_ready(idx)
+        return RBFeatures(params, d_g, idx)
+
+    @classmethod
+    def from_features(cls, feats: RBFeatures, cfg, plan) -> "MeshRows":
+        from repro.core.distributed import make_gram_matvec
+        mesh = plan.mesh
+        idx = feats.payload
+        n = idx.shape[0]
+        d = feats.params.n_features
+        scale_shard = cls._vec_sharding(mesh)
+        ones = jax.device_put(jnp.ones((n, 1), jnp.float32),
+                              cls._row_sharding(mesh))
+        inv_sqrt_r = jnp.full((n,), 1.0 / np.sqrt(cfg.n_grids), jnp.float32)
+        inv_sqrt_r = jax.device_put(inv_sqrt_r, scale_shard)
+        with mesh:
+            deg_mv = make_gram_matvec(mesh, idx, inv_sqrt_r, d, feats.d_g,
+                                      plan.impl, compress=plan.collective_compress,
+                                      chunk_size=plan.chunk_size)
+            deg = jax.jit(lambda: deg_mv(ones)[:, 0])()
+            rowscale = 1.0 / jnp.sqrt(cfg.n_grids * jnp.maximum(deg, 1e-8))
+            rowscale = jax.block_until_ready(
+                jax.lax.with_sharding_constraint(rowscale, scale_shard))
+        return cls(mesh, idx, rowscale, deg, d=d, d_g=feats.d_g,
+                   impl=plan.impl, chunk_size=plan.chunk_size,
+                   compress=plan.collective_compress)
+
+    # -- sharding helpers ---------------------------------------------------
+    @staticmethod
+    def _axes(mesh) -> Tuple[str, ...]:
+        from repro.launch.mesh import data_axes
+        return data_axes(mesh)
+
+    @classmethod
+    def _row_spec(cls, mesh) -> P:
+        axes = cls._axes(mesh)
+        return P(axes if len(axes) > 1 else axes[0], None)
+
+    @classmethod
+    def _row_sharding(cls, mesh) -> NamedSharding:
+        return NamedSharding(mesh, cls._row_spec(mesh))
+
+    @classmethod
+    def _vec_sharding(cls, mesh) -> NamedSharding:
+        axes = cls._axes(mesh)
+        return NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0]))
+
+    @property
+    def n(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def n_shards(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self._axes(self.mesh)]))
+
+    @property
+    def deg(self) -> np.ndarray:
+        return np.asarray(self.degrees)
+
+    def degree_range(self) -> Tuple[float, float]:
+        """Min/max reduced on-device (two scalar transfers, no O(N) gather
+        of the sharded degrees)."""
+        with self.mesh:
+            return float(jnp.min(self.degrees)), float(jnp.max(self.degrees))
+
+    def _gram_fn(self):
+        from repro.core.distributed import make_gram_matvec
+        return make_gram_matvec(self.mesh, self.idx, self.rowscale, self.d,
+                                self.d_g, self.impl, compress=self.compress,
+                                chunk_size=self.chunk_size)
+
+    def matvec(self, v):
+        with self.mesh:
+            return ops.z_matmul(self.idx, v, self.rowscale, d_g=self.d_g,
+                                impl=self.impl)
+
+    def rmatvec(self, u):
+        from repro.core.distributed import make_zt_matvec
+        with self.mesh:
+            return make_zt_matvec(self.mesh, self.idx, self.rowscale, self.d,
+                                  self.d_g, self.impl,
+                                  chunk_size=self.chunk_size)(u)
+
+    def gram(self, u):
+        with self.mesh:
+            return self._gram_fn()(u)
+
+    def map_row_chunks(self, fn, *tall):
+        """Row-local map: GSPMD keeps it shard-local; the result is pinned
+        back to the row sharding so downstream stages stay sharded."""
+        with self.mesh:
+            return jax.lax.with_sharding_constraint(
+                fn(*tall), self._row_sharding(self.mesh))
+
+    def reduce(self, fn, init, *tall):
+        """Additive accumulator over row chunks: a within-shard lax.scan
+        followed by a psum of the final accumulator (init must be the
+        identity, e.g. zeros)."""
+        from repro.core.distributed import make_sharded_reduce
+        with self.mesh:
+            return make_sharded_reduce(
+                self.mesh, fn, chunk_size=self.chunk_size)(init, *tall)
+
+    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
+        b = eigensolver.lobpcg_block_width(self.n, k, cfg.solver_buffer)
+        with self.mesh:
+            matvec = self._gram_fn()
+            x0 = jax.device_put(
+                jax.random.normal(key, (self.n, b), jnp.float32),
+                self._row_sharding(self.mesh))
+            eig = jax.jit(functools.partial(
+                eigensolver.lobpcg, matvec,
+                max_iters=cfg.solver_iters, tol=cfg.solver_tol))(x0)
+            u = jax.block_until_ready(eig.vectors[:, :k])
+        return eigensolver.EigResult(eig.theta[:k], u, eig.resnorms[:k],
+                                     eig.iterations)
+
+    def cluster(self, key, u_hat, cfg) -> Tuple[Any, dict]:
+        from repro.core.distributed import distributed_kmeans
+        res, diag = distributed_kmeans(
+            key, u_hat, cfg.n_clusters, self.mesh,
+            n_iters=cfg.kmeans_iters, n_replicates=cfg.kmeans_replicates,
+            impl=cfg.impl, chunk_size=self.chunk_size)
+        return res, diag
+
+    def residency_diagnostics(self, cfg) -> dict:
+        shard_rows = -(-self.n // self.n_shards)
+        chunk = min(self.chunk_size or shard_rows, shard_rows)
+        return {
+            "n_shards": self.n_shards,
+            "shard_rows": shard_rows,
+            # per-device temporary working set of a within-shard ELL sweep
+            "ell_device_bytes_peak": chunk * self.idx.shape[1] * 4,
+        }

@@ -1,10 +1,12 @@
-"""Chunked / streaming execution of the SC_RB pipeline for out-of-core N.
+"""Chunked / streaming data structures for out-of-core N.
 
 The single-shot pipeline materializes the full ``(N, R)`` ELL index matrix on
 device, capping N at a single accelerator's memory — far short of the paper's
 linear-in-N claim. This module bounds peak *device* residency of the ELL
 matrix to ``O(chunk_size · R)`` while computing the paper's exact algorithm
-(no Nyström/landmark approximation):
+(no Nyström/landmark approximation). It is the storage layer behind the
+``residency="host_chunked"`` plans of the stage-graph executor
+(``repro.core.executor`` / ``repro.core.rowmatrix.HostChunkedRows``):
 
   - ``ChunkedELL``           — row-chunks of ``idx``/``rowscale`` kept on the
     host; each operation uploads one chunk at a time.

@@ -13,7 +13,10 @@ slicing back, so callers never need to know block sizes.
 """
 from __future__ import annotations
 
+import contextlib
+import contextvars
 import functools
+from typing import Mapping, Optional
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +49,67 @@ def _largest_divisor(n: int, cap: int) -> int:
         if n % c == 0:
             return c
     return 1
+
+
+# --------------------------------------------------------------------------
+# Row-tile sizing — one shared picker for every Pallas wrapper.
+#
+# All wrappers pad the row dimension to the chosen block and slice back, so
+# any block size is *valid*; the picker's job is to not tile past the data
+# (a 3-row input should not pad to 1024) while keeping the TPU-friendly
+# power-of-two, ≥ sublane-multiple shape. Per-op caps live in
+# ``DEFAULT_BLOCK_ROWS`` and are overridable either per call (``block_rows=``)
+# or for a whole pipeline run via ``block_rows_overrides`` (which is how
+# ``ExecutionPlan.block_rows`` reaches the kernels without threading an
+# argument through every stage).
+# --------------------------------------------------------------------------
+
+DEFAULT_BLOCK_ROWS: dict[str, int] = {
+    "rb_binning": 256,
+    "ell_spmm": 128,
+    "kmeans_assign": 1024,
+}
+
+_BLOCK_ROWS_OVERRIDES: contextvars.ContextVar[Mapping[str, int]] = (
+    contextvars.ContextVar("block_rows_overrides", default={}))
+
+
+@contextlib.contextmanager
+def block_rows_overrides(overrides: Optional[Mapping[str, int]]):
+    """Scoped per-op row-block caps, keyed by ``DEFAULT_BLOCK_ROWS`` names.
+
+    The executor wraps each pipeline run in this context so a plan's
+    ``block_rows`` mapping applies to every kernel dispatch of that run and
+    nothing else (contextvar ⇒ safe under concurrent runs)."""
+    merged = dict(_BLOCK_ROWS_OVERRIDES.get())
+    merged.update(overrides or {})
+    token = _BLOCK_ROWS_OVERRIDES.set(merged)
+    try:
+        yield
+    finally:
+        _BLOCK_ROWS_OVERRIDES.reset(token)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def pick_block_rows(op: str, n: int, override: Optional[int] = None) -> int:
+    """Row-tile size for a Pallas wrapper: the largest power of two that is
+    ≤ the op's cap and no larger than the padded row count needs.
+
+    ``override`` (a per-call ``block_rows=`` argument) wins over the
+    run-scoped ``block_rows_overrides`` mapping, which wins over
+    ``DEFAULT_BLOCK_ROWS[op]``. Caps must be powers of two — the kernels pad
+    rows to the block, and 8 is the fp32 sublane minimum on TPU.
+    """
+    cap = override or _BLOCK_ROWS_OVERRIDES.get().get(op) \
+        or DEFAULT_BLOCK_ROWS[op]
+    cap = int(cap)
+    if cap < 8 or cap & (cap - 1):
+        raise ValueError(
+            f"block_rows cap for {op!r} must be a power of two ≥ 8, got {cap}")
+    return max(8, min(cap, _next_pow2(n)))
 
 
 # --------------------------------------------------------------------------
@@ -88,6 +152,7 @@ def rb_binning(
     *,
     d_g: int,
     impl: str = "auto",
+    block_rows: Optional[int] = None,
 ) -> jax.Array:
     """ELL column indices of the hashed RB feature matrix: int32 (N, R)."""
     impl = _resolve(impl)
@@ -97,7 +162,7 @@ def rb_binning(
             x, widths, biases, hash_a, hash_c,
             d_g=d_g, r_chunk=_largest_divisor(r, 32),
         )
-    block_n = _largest_divisor_pow2_cap(x.shape[0], 256)
+    block_n = pick_block_rows("rb_binning", x.shape[0], block_rows)
     xp, n = _pad_rows(x, block_n)
     out = _rb_kernel.rb_binning_pallas(
         xp, widths, biases, hash_a, hash_c,
@@ -107,12 +172,6 @@ def rb_binning(
         interpret=not _on_tpu(),
     )
     return out[:n]
-
-
-def _largest_divisor_pow2_cap(n: int, cap: int) -> int:
-    """Largest power-of-two divisor of padded n, capped. Padding makes any
-    cap valid, so just return the cap (callers pad to it)."""
-    return cap
 
 
 # --------------------------------------------------------------------------
@@ -130,10 +189,24 @@ def bin_counts(idx: jax.Array, *, d: int, d_g: int, impl: str = "auto") -> jax.A
     Integer accumulation is order-invariant, so summing per-chunk counts in
     the streaming degree pass is bit-identical to the single-shot result —
     the property tests/test_streaming.py pins down.
+
+    The ``impl="pallas"`` route is **eager-only**: it slices rows with a
+    host-side Python ``for`` loop (each slice would unroll into the trace,
+    one kernel launch per 2²² rows, silently bloating the program). Calling
+    it under ``jax.jit`` raises; inside jit use ``impl="xla"`` — the
+    streaming degree pass calls this eagerly once per host chunk.
     """
     impl = _resolve(impl)
     if impl == "xla":
         return _bin_counts_xla(idx, d=d)
+    # direct jax.core.Tracer reference on purpose: if a future jax removes
+    # it, this fails loudly (as does the guard's test) instead of silently
+    # dropping the eager-only protection
+    if isinstance(idx, jax.core.Tracer):
+        raise TypeError(
+            "bin_counts(impl='pallas') is eager-only: its row slicing is a "
+            "host-side Python loop that would unroll under tracing. Call it "
+            "outside jax.jit, or use impl='xla' (traceable scatter-add).")
     # Pallas route: reuse the zt kernel with unit weights. float32 holds the
     # counts exactly below 2^24, so accumulate in row slices of < 2^22 rows
     # (per-bin occupancy within a slice is bounded by the slice height) and
@@ -194,13 +267,14 @@ def z_matmul(
     *,
     d_g: int,
     impl: str = "auto",
+    block_rows: Optional[int] = None,
 ) -> jax.Array:
     """y = diag(rowscale) · Z_pattern · v.  (N, K)."""
     impl = _resolve(impl)
     r = idx.shape[1]
     if impl == "xla":
         return _z_matmul_xla(idx, v, rowscale, r_chunk=_largest_divisor(r, 8))
-    block_n = 128
+    block_n = pick_block_rows("ell_spmm", idx.shape[0], block_rows)
     idx_p, n = _pad_rows(idx, block_n)
     s_p, _ = _pad_rows(rowscale, block_n)
     out = ell_spmm.z_matmul_pallas(
@@ -219,13 +293,14 @@ def zt_matmul(
     *,
     d_g: int,
     impl: str = "auto",
+    block_rows: Optional[int] = None,
 ) -> jax.Array:
     """q = Z_patternᵀ · diag(rowscale) · u.  (D, K)."""
     impl = _resolve(impl)
     r = idx.shape[1]
     if impl == "xla":
         return _zt_matmul_xla(idx, u, rowscale, d=d, r_chunk=_largest_divisor(r, 8))
-    block_n = 128
+    block_n = pick_block_rows("ell_spmm", idx.shape[0], block_rows)
     idx_p, _ = _pad_rows(idx, block_n)
     u_p, _ = _pad_rows(u, block_n)
     s_p, _ = _pad_rows(rowscale, block_n)   # pad scale with 0 ⇒ no contribution
@@ -252,13 +327,14 @@ def _kmeans_assign_xla(x, centroids):
 
 
 def kmeans_assign(
-    x: jax.Array, centroids: jax.Array, *, impl: str = "auto"
+    x: jax.Array, centroids: jax.Array, *, impl: str = "auto",
+    block_rows: Optional[int] = None,
 ) -> tuple[jax.Array, jax.Array]:
     """(labels int32 (N,), squared distance to nearest centroid (N,))."""
     impl = _resolve(impl)
     if impl == "xla":
         return _kmeans_assign_xla(x, centroids)
-    block_n = 1024 if x.shape[0] >= 1024 else 128
+    block_n = pick_block_rows("kmeans_assign", x.shape[0], block_rows)
     xp, n = _pad_rows(x, block_n)
     labels, dists = _kmeans_kernel.kmeans_assign_pallas(
         xp, centroids, block_n=block_n, interpret=not _on_tpu()

@@ -29,3 +29,14 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist locally, as a 1-D data mesh (tests/examples)."""
     n = len(jax.devices())
     return make_mesh_compat((n,), ("data",))
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple:
+    """The mesh axes rows are sharded over, in nesting order.
+
+    Every row PartitionSpec in the SPMD pipeline composes ``pod`` with
+    ``data`` (see module docstring), so this is the single source of truth
+    for "which axes carry N" — shared by the shard_map collectives in
+    ``repro.core.distributed`` and the ``MeshRows`` representation.
+    """
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)

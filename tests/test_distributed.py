@@ -51,9 +51,14 @@ with mesh:
 err = float(jnp.abs(want - got).max())
 err_chunked = float(jnp.abs(want - got_c).max())
 
-# 2) end-to-end distributed clustering quality
-labels, timer = sc_rb_distributed(x, cfg, mesh)
-acc = metrics.accuracy(labels, y)
+# 2) end-to-end distributed clustering quality — chunked-within-shard plan
+#    (the streaming × distributed composition), with residency diagnostics
+from repro.core import executor
+cfg_c = SCRBConfig(n_clusters=2, n_grids=128, sigma=0.15, d_g=4096,
+                   kmeans_replicates=2, seed=0, chunk_size=64)
+res = executor.execute(x, cfg_c, executor.plan_from_config(cfg_c, mesh=mesh),
+                       keep_embedding=False)
+acc = metrics.accuracy(res.labels, y)
 
 # 3) single-device reference
 ref = sc_rb(jnp.asarray(x), cfg)
@@ -61,6 +66,11 @@ acc_ref = metrics.accuracy(ref.labels, y)
 
 print(json.dumps({"matvec_err": err, "matvec_err_chunked": err_chunked,
                   "acc": acc, "acc_ref": acc_ref,
+                  "kmeans_device_bytes_peak":
+                      res.diagnostics["kmeans_device_bytes_peak"],
+                  "kmeans_single_shard_bytes":
+                      res.diagnostics["kmeans_single_shard_bytes"],
+                  "kmeans_chunk_rows": res.diagnostics["kmeans_chunk_rows"],
                   "devices": len(jax.devices())}))
 """
 
@@ -90,5 +100,14 @@ def test_distributed_chunked_matvec_matches_single_device(result):
 
 
 def test_distributed_clustering_quality(result):
+    """The chunked-within-shard plan clusters as well as single-device."""
     assert result["acc"] > 0.95
     assert result["acc"] >= result["acc_ref"] - 0.05
+
+
+def test_distributed_kmeans_residency_o_shard_chunk(result):
+    """The mesh k-means never holds more than a chunk of derived state per
+    device: O(shard_chunk), not O(N/shards) = 128 rows/shard here."""
+    assert result["kmeans_chunk_rows"] == 64
+    assert result["kmeans_device_bytes_peak"] \
+        < result["kmeans_single_shard_bytes"]

@@ -221,3 +221,55 @@ def test_flash_attention_blocked_tiling():
     want = flash_attention_ref(q, k, v, causal=True)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# Shared tile-size picker + per-op block overrides (ExecutionPlan.block_rows)
+# --------------------------------------------------------------------------
+
+def test_pick_block_rows_respects_n_and_cap():
+    """The picker returns a power of two ≤ the cap that never tiles far past
+    the data (the old stub ignored n entirely and returned the cap)."""
+    assert ops.pick_block_rows("rb_binning", 1_000_000) == 256    # cap wins
+    assert ops.pick_block_rows("rb_binning", 100) == 128          # next pow2
+    assert ops.pick_block_rows("rb_binning", 3) == 8              # sublane min
+    assert ops.pick_block_rows("kmeans_assign", 20) == 32         # not 1024
+    assert ops.pick_block_rows("ell_spmm", 500, override=64) == 64
+    with pytest.raises(ValueError, match="power of two"):
+        ops.pick_block_rows("ell_spmm", 100, override=100)
+
+
+def test_block_rows_override_context():
+    with ops.block_rows_overrides({"ell_spmm": 32}):
+        assert ops.pick_block_rows("ell_spmm", 10_000) == 32
+        assert ops.pick_block_rows("rb_binning", 10_000) == 256   # untouched
+    assert ops.pick_block_rows("ell_spmm", 10_000) == 128         # restored
+
+
+def test_block_rows_change_tiling_not_results():
+    """Pallas wrappers produce identical results under any block cap —
+    padding makes every tile size valid."""
+    key = jax.random.PRNGKey(5)
+    r, d_g, k = 8, 64, 3
+    d = r * d_g
+    idx = (jax.random.randint(key, (100, r), 0, d_g)
+           + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    v = jax.random.normal(jax.random.PRNGKey(1), (d, k), jnp.float32)
+    s = jax.random.uniform(jax.random.PRNGKey(2), (100,), jnp.float32) + 0.5
+    want = np.asarray(ops.z_matmul(idx, v, s, d_g=d_g, impl="pallas"))
+    got = np.asarray(ops.z_matmul(idx, v, s, d_g=d_g, impl="pallas",
+                                  block_rows=16))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    with ops.block_rows_overrides({"ell_spmm": 16}):
+        got_ctx = np.asarray(ops.z_matmul(idx, v, s, d_g=d_g, impl="pallas"))
+    np.testing.assert_allclose(got_ctx, want, rtol=1e-6, atol=1e-6)
+
+
+def test_bin_counts_pallas_is_eager_only():
+    """The Pallas bin_counts route slices rows in a host loop; under jit it
+    must fail loudly instead of silently unrolling (impl='xla' traces)."""
+    idx = jnp.zeros((16, 4), jnp.int32)
+    with pytest.raises(TypeError, match="eager-only"):
+        jax.jit(lambda i: ops.bin_counts(i, d=64, d_g=16, impl="pallas"))(idx)
+    out = jax.jit(lambda i: ops.bin_counts(i, d=64, d_g=16, impl="xla"))(idx)
+    assert int(out[0]) == 64
