@@ -11,14 +11,35 @@ import numpy as np
 
 from benchmarks.datasets import suite
 from repro.core import metrics as M
-from repro.core.baselines import METHODS, BaselineConfig
+from repro.core.baselines import METHOD_FEATURE_MAPS, METHODS, BaselineConfig
+from repro.core.featuremap import FEATURE_MAPS
 
 # exact SC is O(N²·d) memory/compute — cap like the paper caps with '—'
 SC_EXACT_MAX_N = 4_000
 
 
+def check_registry_coverage() -> None:
+    """Every Table-2 method must be present and, where feature-map-backed,
+    point at a registered map — a rewrite of baselines.py can never silently
+    drop one of the paper's comparison methods."""
+    missing = set(METHOD_FEATURE_MAPS) ^ set(METHODS)
+    if missing:
+        raise AssertionError(
+            f"METHODS / METHOD_FEATURE_MAPS disagree on {sorted(missing)}")
+    if len(METHODS) != 9:
+        raise AssertionError(
+            f"expected the paper's 9 methods (8 baselines + sc_rb), "
+            f"got {sorted(METHODS)}")
+    unbacked = {name: fm for name, fm in METHOD_FEATURE_MAPS.items()
+                if fm is not None and fm not in FEATURE_MAPS}
+    if unbacked:
+        raise AssertionError(
+            f"methods reference unregistered feature maps: {unbacked}")
+
+
 def run(scale: float = 0.02, rank: int = 256, seed: int = 0,
         methods: List[str] | None = None) -> Dict:
+    check_registry_coverage()
     methods = methods or list(METHODS)
     results: Dict[str, Dict] = {}
     for spec, x, y, sigma in suite(scale=scale, seed=seed):
@@ -38,6 +59,8 @@ def run(scale: float = 0.02, rank: int = 256, seed: int = 0,
         results[spec.name] = {
             "n": x.shape[0], "k": spec.k, "d": spec.d,
             "metrics": per_method, "avg_rank": ranks, "time_s": times,
+            # provenance: the registry map each method ran through
+            "feature_maps": {m: METHOD_FEATURE_MAPS[m] for m in per_method},
         }
         best = min(ranks, key=ranks.get)
         print(f"[table2] {spec.name:14s} N={x.shape[0]:7d} "

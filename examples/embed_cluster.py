@@ -2,21 +2,28 @@
 
 Builds a topic-structured synthetic corpus (K latent topics, each with its
 own token distribution), embeds every document with a small in-framework LM
-(mean-pooled final hidden states), then runs distributed-grade SC_RB on the
-embeddings and checks the recovered clusters against the latent topics.
+(mean-pooled final hidden states), then **fits SC_RB once** on a slice of
+the corpus and serves the rest through the fitted model — the
+fit-once/predict-stream shape of the fitted-model API:
+
+  model = SCRBModel.fit(x_fit, cfg)       # Alg. 2 + out-of-sample state
+  model.predict(batch)                    # new docs: no refit, O(batch) work
+  model.save(path) / SCRBModel.load(path) # deployable artifact
 
 This is the production shape of the pipeline: representation model →
-``repro.core.spectral_embed``/``sc_rb`` → labels (DESIGN.md §4).
+``SCRBModel`` → streaming labels (DESIGN.md §4).
 
     PYTHONPATH=src python examples/embed_cluster.py [--docs 2000]
 """
 import argparse
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import SCRBConfig, metrics, sc_rb
+from repro.core import SCRBConfig, SCRBModel, metrics
 from repro.models import transformer as T
 from repro.models.config import ModelConfig, dense_segments
 
@@ -90,13 +97,39 @@ def main() -> None:
     from repro.core.rb import suggest_sigma
     sigma = suggest_sigma(x)
     print(f"median-heuristic sigma = {sigma:.1f}")
-    res = sc_rb(jnp.asarray(x), SCRBConfig(
+
+    # fit ONCE on the first half of the corpus...
+    n_fit = x.shape[0] // 2
+    model = SCRBModel.fit(x[:n_fit], SCRBConfig(
         n_clusters=args.topics, n_grids=256, sigma=sigma,
         kmeans_replicates=4))
-    m = metrics.all_metrics(res.labels, topics)
-    print("SC_RB on LM embeddings: "
-          + "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
-    print(res.timer)
+    m_fit = metrics.all_metrics(model.fit_result.labels, topics[:n_fit])
+    print(f"SC_RB fit on {n_fit} docs: "
+          + "  ".join(f"{k}={v:.3f}" for k, v in m_fit.items()))
+    print(model.fit_result.timer)
+
+    # ...then stream the remaining docs through the fitted model — the
+    # serving loop: out-of-sample embed + nearest-centroid, no refitting
+    import time
+    preds = []
+    t0 = time.perf_counter()
+    for start in range(n_fit, x.shape[0], 256):
+        preds.append(model.predict(x[start:start + 256]))
+    served = np.concatenate(preds) if preds else np.empty((0,), np.int32)
+    dt = time.perf_counter() - t0
+    m_oos = metrics.all_metrics(served, topics[n_fit:])
+    print(f"served {served.shape[0]} unseen docs in {dt:.2f}s "
+          f"({served.shape[0] / max(dt, 1e-9):.0f} docs/s): "
+          + "  ".join(f"{k}={v:.3f}" for k, v in m_oos.items()))
+
+    # the fitted model is a deployable artifact
+    path = os.path.join(tempfile.mkdtemp(), "scrb_model.npz")
+    model.save(path)
+    reloaded = SCRBModel.load(path)
+    same = np.array_equal(reloaded.predict(x[n_fit:n_fit + 256]),
+                          served[:min(256, served.shape[0])])
+    print(f"saved {os.path.getsize(path) / 2**20:.1f}MiB artifact to {path}; "
+          f"reloaded predict bit-identical: {same}")
 
 
 if __name__ == "__main__":

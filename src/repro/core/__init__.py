@@ -2,7 +2,10 @@
 Random Binning features (SC_RB) — KDD'18, Wu et al.
 
 Public API:
-  - ``SCRBConfig`` / ``sc_rb`` / ``spectral_embed``     (Alg. 2)
+  - ``SCRBModel``                                       (fitted-model API:
+    fit / transform / predict / save / load — out-of-sample serving)
+  - ``SCRBConfig`` / ``sc_rb`` / ``spectral_embed``     (Alg. 2, one-shot)
+  - ``FeatureMap`` / ``FEATURE_MAPS`` / ``make_feature_map`` (stage-1 registry)
   - ``make_rb_params`` / ``rb_transform``               (Alg. 1)
   - ``build_normalized_adjacency``                      (Eq. 5/6)
   - ``top_k_eigenpairs``                                (PRIMME-analogue solvers)
@@ -33,9 +36,14 @@ from repro.core.kmeans import (  # noqa: F401
 from repro.core.executor import (  # noqa: F401
     ExecutionPlan, execute, plan_from_config,
 )
-from repro.core.rowmatrix import (  # noqa: F401
-    DeviceRows, HostChunkedRows, MeshRows, RowMatrix,
+from repro.core.featuremap import (  # noqa: F401
+    FEATURE_MAPS, FeatureMap, LSCMap, NystromMap, RBMap, RFFMap,
+    make_feature_map,
 )
+from repro.core.rowmatrix import (  # noqa: F401
+    DeviceRows, FittedFeatures, HostChunkedRows, MeshRows, RowMatrix,
+)
+from repro.core.model import SCRBModel  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401
     SCRBConfig, SCRBResult, SpectralEmbedding, sc_rb, spectral_embed,
 )

@@ -1,4 +1,4 @@
-"""The paper's 8 comparison methods (Table 2/3), implemented in JAX.
+"""The paper's 8 comparison methods (Table 2/3) as *plan configurations*.
 
   K-means  — Lloyd on raw X                                  [15]
   SC       — exact spectral clustering (dense W, eigh)       [21]
@@ -10,20 +10,31 @@
   SC_RF    — SC with the RFF-approximated Laplacian          (paper's variant)
   SC_RB    — this paper (repro.core.pipeline)
 
+Every sampling-based method is "feature map → (degree-normalize) → embed →
+k-means" (Tremblay & Loukas), so the spectral methods are one code path:
+an ``ExecutionPlan`` whose stage-1 slot is a registered
+``repro.core.featuremap`` instance, run through the same five-stage
+executor as SC_RB — not a hand-written pipeline per method. The feature-
+space kernel-k-means methods (KK_RF, KK_RS) fit the same maps and skip the
+spectral stages. ``METHOD_FEATURE_MAPS`` records which registry entry backs
+each method (``None`` for the two non-feature-map methods), and is asserted
+against ``METHODS`` by ``benchmarks/table2_accuracy.py`` so no method is
+silently dropped.
+
 All methods share the seed / k-means protocol so differences come from the
 approximation, mirroring the paper's controlled setup.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import executor, featuremap
 from repro.core.kmeans import kmeans as _kmeans, row_normalize
-from repro.core import nystrom, pipeline, rff
 from repro.utils import StageTimer, fold_key
 
 
@@ -44,6 +55,13 @@ class BaselineResult:
     timer: StageTimer
 
 
+def _scrb_config(cfg: BaselineConfig) -> executor.SCRBConfig:
+    return executor.SCRBConfig(
+        n_clusters=cfg.n_clusters, n_grids=cfg.rank, sigma=cfg.sigma,
+        kmeans_iters=cfg.kmeans_iters,
+        kmeans_replicates=cfg.kmeans_replicates, seed=cfg.seed)
+
+
 def _finish_kmeans(key, emb, cfg: BaselineConfig, timer: StageTimer) -> np.ndarray:
     with timer.stage("kmeans"):
         res = _kmeans(
@@ -54,29 +72,43 @@ def _finish_kmeans(key, emb, cfg: BaselineConfig, timer: StageTimer) -> np.ndarr
     return labels
 
 
-def _dense_feature_sc(phi: jax.Array, k: int, *, normalize_laplacian: bool,
-                      eps: float = 1e-8) -> jax.Array:
-    """Spectral embedding from a dense feature matrix Φ with ΦΦᵀ ≈ W.
+def _spectral_via_registry(fm_name: str, *, laplacian: bool) -> Callable:
+    """A Table-2 spectral method as an executor plan over the registry."""
 
-    With Laplacian normalization: top-K left singular vectors of
-    D^{-1/2}Φ where D = diag(Φ(Φᵀ1)) — the same math as SC_RB but dense.
-    Without: top-K left singular vectors of Φ itself (SV_RF).
-    Uses the (R×R) Gram eigendecomposition — exact for R ≪ N.
-    """
-    if normalize_laplacian:
-        deg = phi @ (phi.T @ jnp.ones((phi.shape[0],), phi.dtype))
-        scale = 1.0 / jnp.sqrt(jnp.maximum(deg, eps))
-        phi = phi * scale[:, None]
-    gram = phi.T @ phi                                     # (R, R)
-    lam, v = jnp.linalg.eigh(gram)
-    top = jnp.arange(gram.shape[0] - k, gram.shape[0])[::-1]
-    sig = jnp.sqrt(jnp.maximum(lam[top], eps))
-    u = (phi @ v[:, top]) / sig[None, :]
-    return row_normalize(u)
+    def run(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+        fm = featuremap.make_feature_map(
+            fm_name, rank=cfg.rank, sigma=cfg.sigma, kernel=cfg.kernel)
+        plan = executor.ExecutionPlan(feature_map=fm,
+                                      laplacian_normalize=laplacian)
+        res = executor.execute(x, _scrb_config(cfg), plan)
+        return BaselineResult(res.labels, res.timer)
+
+    run.__name__ = f"spectral_{fm_name}"
+    return run
+
+
+def _feature_kmeans_via_registry(fm_name: str) -> Callable:
+    """Kernel k-means in a registered map's feature space (KK_RF / KK_RS):
+    centroids restricted to span(Φ) ⇒ plain k-means on Φ."""
+
+    def run(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+        timer = StageTimer()
+        key = jax.random.PRNGKey(cfg.seed)
+        with timer.stage("features"):
+            fm = featuremap.make_feature_map(
+                fm_name, rank=cfg.rank, sigma=cfg.sigma, kernel=cfg.kernel)
+            fitted = fm.fit(key, jnp.asarray(x, jnp.float32))
+            phi = jax.block_until_ready(
+                fitted.transform(jnp.asarray(x, jnp.float32)))
+        labels = _finish_kmeans(fold_key(key, "kmeans"), phi, cfg, timer)
+        return BaselineResult(labels, timer)
+
+    run.__name__ = f"feature_kmeans_{fm_name}"
+    return run
 
 
 # ---------------------------------------------------------------------------
-# methods
+# the two non-feature-map methods
 # ---------------------------------------------------------------------------
 
 def kmeans_raw(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
@@ -111,114 +143,41 @@ def sc_exact(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
     return BaselineResult(labels, timer)
 
 
-def _rff_phi(x, cfg: BaselineConfig, timer: StageTimer) -> jax.Array:
-    with timer.stage("features"):
-        params = rff.make_rff_params(
-            fold_key(jax.random.PRNGKey(cfg.seed), "rff"),
-            cfg.rank, x.shape[1], cfg.sigma, kernel=cfg.kernel)
-        phi = jax.block_until_ready(rff.rff_transform(x, params))
-    return phi
-
-
-def kk_rf(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
-    """Kernel k-means directly on the dense RFF matrix (N × R)."""
-    timer = StageTimer()
-    phi = _rff_phi(x, cfg, timer)
-    labels = _finish_kmeans(
-        fold_key(jax.random.PRNGKey(cfg.seed), "kmeans"), phi, cfg, timer)
-    return BaselineResult(labels, timer)
-
-
-def sv_rf(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
-    """k-means on the top-K left singular vectors of the RFF matrix (W approx)."""
-    timer = StageTimer()
-    phi = _rff_phi(x, cfg, timer)
-    with timer.stage("svd"):
-        u = jax.block_until_ready(
-            _dense_feature_sc(phi, cfg.n_clusters, normalize_laplacian=False))
-    labels = _finish_kmeans(
-        fold_key(jax.random.PRNGKey(cfg.seed), "kmeans"), u, cfg, timer)
-    return BaselineResult(labels, timer)
-
-
-def sc_rf(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
-    """SC on the RFF-approximated normalized Laplacian (L approx)."""
-    timer = StageTimer()
-    phi = _rff_phi(x, cfg, timer)
-    with timer.stage("svd"):
-        u = jax.block_until_ready(
-            _dense_feature_sc(phi, cfg.n_clusters, normalize_laplacian=True))
-    labels = _finish_kmeans(
-        fold_key(jax.random.PRNGKey(cfg.seed), "kmeans"), u, cfg, timer)
-    return BaselineResult(labels, timer)
-
-
-def kk_rs(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
-    """Approximate kernel k-means by random sampling [10]: centroids are
-    restricted to the span of `rank` sampled points ⇒ k-means in the sampled
-    Nyström feature space."""
-    timer = StageTimer()
-    key = jax.random.PRNGKey(cfg.seed)
-    with timer.stage("features"):
-        phi = jax.block_until_ready(nystrom.nystrom_features(
-            fold_key(key, "sample"), x.astype(jnp.float32),
-            n_landmarks=min(cfg.rank, x.shape[0] // 2),
-            sigma=cfg.sigma, kernel=cfg.kernel))
-    labels = _finish_kmeans(fold_key(key, "kmeans"), phi, cfg, timer)
-    return BaselineResult(labels, timer)
-
-
-def sc_nys(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
-    """SC with the Nyström-approximated W (+ Laplacian normalization)."""
-    timer = StageTimer()
-    key = jax.random.PRNGKey(cfg.seed)
-    with timer.stage("features"):
-        phi = jax.block_until_ready(nystrom.nystrom_features(
-            fold_key(key, "nys"), x.astype(jnp.float32),
-            n_landmarks=min(cfg.rank, x.shape[0] // 2),
-            sigma=cfg.sigma, kernel=cfg.kernel))
-    with timer.stage("svd"):
-        u = jax.block_until_ready(
-            _dense_feature_sc(phi, cfg.n_clusters, normalize_laplacian=True))
-    labels = _finish_kmeans(fold_key(key, "kmeans"), u, cfg, timer)
-    return BaselineResult(labels, timer)
-
-
-def sc_lsc(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
-    """Landmark-based SC (LSC): s-NN bipartite graph to anchors."""
-    timer = StageTimer()
-    key = jax.random.PRNGKey(cfg.seed)
-    with timer.stage("features"):
-        zbar = jax.block_until_ready(nystrom.lsc_bipartite_features(
-            fold_key(key, "lsc"), x.astype(jnp.float32),
-            n_anchors=min(cfg.rank, x.shape[0] // 2),
-            n_nearest=min(5, min(cfg.rank, x.shape[0] // 2)),
-            sigma=cfg.sigma, kernel=cfg.kernel))
-    with timer.stage("svd"):
-        u = jax.block_until_ready(
-            _dense_feature_sc(zbar, cfg.n_clusters, normalize_laplacian=True))
-    labels = _finish_kmeans(fold_key(key, "kmeans"), u, cfg, timer)
-    return BaselineResult(labels, timer)
-
-
 def sc_rb_baseline(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
-    """This paper, under the shared baseline protocol."""
-    res = pipeline.sc_rb(x, pipeline.SCRBConfig(
-        n_clusters=cfg.n_clusters, n_grids=cfg.rank, sigma=cfg.sigma,
-        kmeans_iters=cfg.kmeans_iters,
-        kmeans_replicates=cfg.kmeans_replicates, seed=cfg.seed,
-    ))
+    """This paper, under the shared baseline protocol (the default RB plan).
+
+    Calls the executor directly — not the ``SCRBModel``-backed ``sc_rb``
+    wrapper — so the Table-2/3 timing comparison stays apples-to-apples:
+    none of the baseline rows pay the fitted-model ``oos_state`` pass.
+    Labels are identical to ``pipeline.sc_rb`` (same executor, same keys).
+    """
+    res = executor.execute(x, _scrb_config(cfg))
     return BaselineResult(res.labels, res.timer)
 
 
 METHODS: Dict[str, Callable[[jax.Array, BaselineConfig], BaselineResult]] = {
     "kmeans": kmeans_raw,
     "sc": sc_exact,
-    "kk_rs": kk_rs,
-    "kk_rf": kk_rf,
-    "sv_rf": sv_rf,
-    "sc_lsc": sc_lsc,
-    "sc_nys": sc_nys,
-    "sc_rf": sc_rf,
+    "kk_rs": _feature_kmeans_via_registry("nystrom"),
+    "kk_rf": _feature_kmeans_via_registry("rff"),
+    "sv_rf": _spectral_via_registry("rff", laplacian=False),
+    "sc_lsc": _spectral_via_registry("lsc", laplacian=True),
+    "sc_nys": _spectral_via_registry("nystrom", laplacian=True),
+    "sc_rf": _spectral_via_registry("rff", laplacian=True),
     "sc_rb": sc_rb_baseline,
+}
+
+# which registry entry backs each method (None: not a feature-map method) —
+# pinned by benchmarks/table2_accuracy.py so the registry rewrite can never
+# silently drop one of the paper's 8 comparison methods.
+METHOD_FEATURE_MAPS: Dict[str, Optional[str]] = {
+    "kmeans": None,
+    "sc": None,
+    "kk_rs": "nystrom",
+    "kk_rf": "rff",
+    "sv_rf": "rff",
+    "sc_lsc": "lsc",
+    "sc_nys": "nystrom",
+    "sc_rf": "rff",
+    "sc_rb": "rb",
 }

@@ -89,6 +89,51 @@ def make_gram_matvec(mesh: Mesh, idx: jax.Array, rowscale: jax.Array,
     return lambda u: gram(u, idx, rowscale)
 
 
+def make_degree_pass(mesh: Mesh, idx: jax.Array, d: int, d_g: int,
+                     impl: str = "auto", compress: bool = False,
+                     chunk_size: Optional[int] = None):
+    """The Eq. 6 degree pass deg = Z(Zᵀ1), also emitting the replicated (D,)
+    bin occupancies Zᵀ1 that the first product computes anyway — the fitted
+    model's degree dual, captured at no extra collective sweep. Same
+    blocking/collective structure as ``make_gram_matvec``.
+    """
+    axes = data_axes(mesh)
+    row_spec = P(axes if len(axes) > 1 else axes[0])
+    r = idx.shape[1]
+    inv_sqrt_r = jnp.float32(1.0 / np.sqrt(r))
+
+    @functools.partial(
+        shard_map_compat, mesh=mesh,
+        in_specs=(P(row_spec[0], None),),
+        check_vma=False,
+        out_specs=(row_spec, P(None)))
+    def degpass(idx_local):
+        n_local = idx_local.shape[0]
+        ones = jnp.ones((n_local, 1), jnp.float32)
+        scale_local = jnp.full((n_local,), inv_sqrt_r, jnp.float32)
+        if chunk_size is None:
+            q = ops.zt_matmul(idx_local, ones, scale_local, d,
+                              d_g=d_g, impl=impl)
+        else:
+            q = streaming.chunked_zt_matmul(
+                idx_local, ones, scale_local, d=d, d_g=d_g,
+                chunk_size=chunk_size, impl=impl)
+        if compress:
+            q = jax.lax.psum(q.astype(jnp.bfloat16), axes).astype(jnp.float32)
+        else:
+            q = jax.lax.psum(q, axes)
+        if chunk_size is None:
+            y = ops.z_matmul(idx_local, q, scale_local, d_g=d_g, impl=impl)
+        else:
+            y = streaming.chunked_z_matmul(
+                idx_local, q, scale_local, d_g=d_g, chunk_size=chunk_size,
+                impl=impl)
+        # undo the 1/√R value folding: raw occupancies (exact up to ~2 ulp)
+        return y[:, 0], q[:, 0] * jnp.sqrt(jnp.float32(r))
+
+    return lambda: degpass(idx)
+
+
 def make_zt_matvec(mesh: Mesh, idx: jax.Array, rowscale: jax.Array,
                    d: int, d_g: int, impl: str = "auto",
                    chunk_size: Optional[int] = None):
@@ -175,16 +220,20 @@ def distributed_kmeans(
       1. *Seeding* — a pool of ``min(n, max(4k, 64))`` rows is gathered by
          index (O(pool·dim) cross-device traffic, the only gather anywhere);
          k-means++ D² seeding runs on the pool, once per replicate.
-      2. *Updates* — exact Lloyd steps: assignment + segment statistics run
-         under ``shard_map`` as a ``lax.scan`` over row chunks of each local
-         shard (padded rows carry zero weight), then one psum of the (K,)
-         counts and (K, dim) sums — O(K·dim) traffic per step.
-      3. *Final sweep* — a per-chunk assignment pass emits the labels still
-         sharded over the rows; only the winning replicate's (N,) int32
-         labels ever leave the mesh.
+      2. *Updates* — exact Lloyd steps for **all replicates at once**: the
+         centroids live in one (r, K, dim) tensor, and every chunk of the
+         assignment/statistics sweep (a ``lax.scan`` over row chunks of each
+         local shard, padded rows carry zero weight) is shared by all r
+         replicates — the data is uploaded/swept once per step, not r times.
+         One psum of the (r, K) counts and (r, K, dim) sums — O(r·K·dim)
+         traffic per step.
+      3. *Final sweep* — a per-chunk assignment pass for the best replicate
+         emits the labels still sharded over the rows; only the winning
+         replicate's (N,) int32 labels ever leave the mesh.
 
     Peak per-device temporary: the (chunk, dim) row block plus its
-    (chunk, K) distance block — O(chunk), not O(N/shards).
+    (chunk, K) distance block — O(chunk), not O(N/shards) and not O(r·chunk)
+    (replicates are processed sequentially per chunk via ``lax.map``).
     """
     axes = data_axes(mesh)
     row_axis = axes if len(axes) > 1 else axes[0]
@@ -213,44 +262,54 @@ def distributed_kmeans(
     rep_keys = jax.random.split(jax.random.fold_in(key, 1), n_replicates)
 
     @functools.partial(shard_map_compat, mesh=mesh,
-                       in_specs=(row_spec, P(None, None)),
+                       in_specs=(row_spec, P(None, None, None)),
                        out_specs=(P(), P(), P()), check_vma=False)
-    def _stats(u_local, cents):
+    def _stats(u_local, cents_r):
+        # cents_r: (r, K, dim) — all replicates share each chunk sweep; the
+        # per-replicate assignment runs as a sequential lax.map so the live
+        # working set stays one (chunk, K) distance block, not r of them.
         m = u_local.shape[0]
         pad = (-m) % c
         up = jnp.pad(u_local, ((0, pad), (0, 0)))
         w = (jnp.arange(m + pad) < m).astype(jnp.float32)
         steps = (m + pad) // c
+        r = cents_r.shape[0]
 
         def body(carry, args):
             counts, sums, inertia = carry
             uc, wc = args
             observed["assign_rows"] = max(observed["assign_rows"],
                                           uc.shape[0])
-            labels, dists = ops.kmeans_assign(uc, cents, impl=impl)
-            counts = counts + jax.ops.segment_sum(wc, labels, num_segments=k)
-            sums = sums + jax.ops.segment_sum(uc * wc[:, None], labels,
-                                              num_segments=k)
-            return (counts, sums, inertia + jnp.sum(dists * wc)), None
 
-        init = (jnp.zeros((k,), jnp.float32),
-                jnp.zeros((k, dim), jnp.float32), jnp.float32(0.0))
+            def one_rep(cents):
+                labels, dists = ops.kmeans_assign(uc, cents, impl=impl)
+                cnt = jax.ops.segment_sum(wc, labels, num_segments=k)
+                sm = jax.ops.segment_sum(uc * wc[:, None], labels,
+                                         num_segments=k)
+                return cnt, sm, jnp.sum(dists * wc)
+
+            cnt, sm, iner = jax.lax.map(one_rep, cents_r)
+            return (counts + cnt, sums + sm, inertia + iner), None
+
+        init = (jnp.zeros((r, k), jnp.float32),
+                jnp.zeros((r, k, dim), jnp.float32),
+                jnp.zeros((r,), jnp.float32))
         (counts, sums, inertia), _ = jax.lax.scan(
             body, init, (up.reshape(steps, c, dim), w.reshape(steps, c)))
         return (jax.lax.psum(counts, axes), jax.lax.psum(sums, axes),
                 jax.lax.psum(inertia, axes))
 
     @jax.jit
-    def _lloyd(u_in, cents0):
-        def step(cents, _):
-            counts, sums, _ = _stats(u_in, cents)
-            new = sums / jnp.maximum(counts, 1.0)[:, None]
+    def _lloyd(u_in, cents0_r):
+        def step(cents_r, _):
+            counts, sums, _ = _stats(u_in, cents_r)
+            new = sums / jnp.maximum(counts, 1.0)[..., None]
             # keep previous centroid for empty clusters
-            return jnp.where((counts > 0)[:, None], new, cents), None
+            return jnp.where((counts > 0)[..., None], new, cents_r), None
 
-        cents, _ = jax.lax.scan(step, cents0, None, length=n_iters)
-        _, _, inertia = _stats(u_in, cents)
-        return cents, inertia
+        cents_r, _ = jax.lax.scan(step, cents0_r, None, length=n_iters)
+        _, _, inertia = _stats(u_in, cents_r)
+        return cents_r, inertia
 
     @functools.partial(shard_map_compat, mesh=mesh,
                        in_specs=(row_spec, P(None, None)),
@@ -270,14 +329,14 @@ def distributed_kmeans(
         _, ls = jax.lax.scan(body, None, up.reshape(steps, c, dim))
         return ls.reshape(-1)[:m]
 
-    best_inertia, best_cents = None, None
     with mesh:
-        for rk in rep_keys:
-            cents0 = _plusplus_init(rk, pool, k)
-            cents, inertia = _lloyd(u, cents0)
-            val = float(inertia)
-            if best_inertia is None or val < best_inertia:
-                best_inertia, best_cents = val, cents
+        # one batched Lloyd run over the (r, K, dim) centroid tensor — every
+        # assignment sweep is shared by all replicates
+        cents0_r = jnp.stack([_plusplus_init(rk, pool, k) for rk in rep_keys])
+        cents_r, inertia_r = _lloyd(u, cents0_r)
+        best = int(jnp.argmin(inertia_r))
+        best_cents = cents_r[best]
+        best_inertia = float(inertia_r[best])
         labels = jax.block_until_ready(_assign(u, best_cents))
 
     rows = observed["assign_rows"]
@@ -288,6 +347,7 @@ def distributed_kmeans(
         "kmeans_chunk_rows": rows,
         "kmeans_shard_rows": shard_rows,
         "kmeans_pool_rows": pool_size,
+        "kmeans_replicates_batched": n_replicates,
         # per-device live set of one assignment step: the (rows, dim) row
         # block + its (rows, K) distance block — the bench gate's check
         # that the stage is O(shard_chunk), not O(N/shards)
@@ -304,16 +364,14 @@ def sc_rb_distributed(
 ) -> Tuple[np.ndarray, StageTimer]:
     """Algorithm 2 on a multi-device mesh; returns (labels, stage timer).
 
-    Thin wrapper over the stage-graph executor with a ``placement="mesh"``
-    plan; ``config.chunk_size`` turns on within-shard chunking for the
-    mat-vec scans *and* the k-means stage. The embedding stays sharded —
-    only the labels leave the run (``executor.execute`` with
-    ``keep_embedding=False``).
+    Thin wrapper over ``SCRBModel.fit`` with a ``placement="mesh"`` plan;
+    ``config.chunk_size`` turns on within-shard chunking for the mat-vec
+    scans *and* the k-means stage. The embedding stays sharded — only the
+    labels (and the O(D·K) fitted-model state) leave the run.
     """
-    from repro.core import executor
-    plan = executor.plan_from_config(config, mesh=mesh)
-    res = executor.execute(x, config, plan, keep_embedding=False)
-    return res.labels, res.timer
+    from repro.core.model import SCRBModel
+    model = SCRBModel.fit(x, config, mesh=mesh, keep_embedding=False)
+    return model.fit_result.labels, model.fit_result.timer
 
 
 def lower_clustering_cell(mesh: Mesh, *, n: int, dim: int, k: int,

@@ -19,7 +19,11 @@ The five stages —
 
 plus the orthogonal knobs ``prefetch`` (double-buffered H2D uploads),
 ``impl`` (pallas/xla kernel dispatch), ``collective_compress`` (bf16 psum
-payload on the mesh) and ``block_rows`` (per-op Pallas row-tile caps).
+payload on the mesh), ``block_rows`` (per-op Pallas row-tile caps),
+``feature_map`` (a ``repro.core.featuremap`` registry instance for stage 1 —
+None means Random Binning from the config; this is how the paper's
+baselines share the executor) and ``laplacian_normalize`` (the D̂^{-1/2}
+degree normalization; False gives the SV-style plain feature SVD).
 
 The public entry points — ``pipeline.sc_rb``, ``pipeline.spectral_embed``,
 ``distributed.sc_rb_distributed`` — are thin wrappers that build a plan from
@@ -45,7 +49,7 @@ from typing import Any, Mapping, Optional
 import jax
 import numpy as np
 
-from repro.core import rowmatrix, streaming
+from repro.core import featuremap, rowmatrix, streaming
 from repro.core.kmeans import row_normalize
 from repro.kernels import ops
 from repro.utils import StageTimer, fold_key
@@ -90,6 +94,10 @@ class SCRBResult:
     singular_values: np.ndarray   # (K,) of Ẑ  (σ_i = sqrt(eigval of ẐẐᵀ))
     timer: StageTimer
     diagnostics: dict
+    state: Optional[dict] = None  # fitted internals (``execute(keep_state=
+    # True)``): the RowMatrix ``z``, fitted ``features``, raw ``eig`` pairs,
+    # ``u_hat`` and ``km`` — what ``SCRBModel.fit`` turns into a deployable
+    # artifact. None by default so one-shot runs don't pin O(N) state.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +116,12 @@ class ExecutionPlan:
     collective_compress: bool = False    # bf16 (D, K) psum payload on mesh
     mesh: Optional[Any] = None           # jax.sharding.Mesh for placement=mesh
     block_rows: Optional[Mapping[str, int]] = None
+    feature_map: Optional[Any] = None    # stage-1 repro.core.featuremap
+    # instance (unfitted); None → Random Binning from the SCRBConfig. This
+    # is how the paper's baselines become plan points: same executor, same
+    # stages, a different registered map.
+    laplacian_normalize: bool = True     # D̂^{-1/2} degree normalization
+    # (False → plain feature SVD, the SV_RF baseline variant)
 
     def __post_init__(self):
         if self.placement not in ("single", "mesh"):
@@ -162,6 +176,7 @@ def execute(
     *,
     final_stage: str = "kmeans",
     keep_embedding: bool = True,
+    keep_state: bool = False,
 ) -> SCRBResult:
     """Run Algorithm 2 under a plan; every entry point goes through here.
 
@@ -170,6 +185,10 @@ def execute(
     ``keep_embedding=False`` skips materializing the (N, K) embedding into
     the result (the distributed wrapper's default: the embedding stays
     sharded/chunked and only the labels leave the run).
+    ``keep_state=True`` attaches the fitted internals (RowMatrix, fitted
+    feature map, raw eigenpairs, k-means result) to ``result.state`` — the
+    handle ``repro.core.model.SCRBModel.fit`` builds its out-of-sample
+    extension from.
     """
     cfg = config
     if plan is None:
@@ -177,13 +196,16 @@ def execute(
     if final_stage not in ("normalize", "kmeans"):
         raise ValueError(f"unknown final_stage {final_stage!r}")
     rep_cls = _REPRESENTATIONS[(plan.placement, plan.residency)]
+    fm = plan.feature_map
+    if fm is None:
+        fm = featuremap.from_config(cfg, impl=plan.impl)
     key = jax.random.PRNGKey(cfg.seed)
     timer = StageTimer()
     k = cfg.n_clusters
 
     with ops.block_rows_overrides(plan.block_rows):
         with timer.stage("rb_features"):
-            feats = rep_cls.rb_features(x, cfg, plan, key)
+            feats = rep_cls.fit_transform(x, fm, cfg, plan, key)
         with timer.stage("degrees"):
             z = rep_cls.from_features(feats, cfg, plan)
         with timer.stage("svd"):
@@ -196,18 +218,21 @@ def execute(
                 km, cluster_diag = z.cluster(fold_key(key, "kmeans"),
                                              u_hat, cfg)
 
+    fitted = feats.fmap
     sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
     deg_min, deg_max = z.degree_range()
     diagnostics = {
         "plan": {"placement": plan.placement, "residency": plan.residency,
                  "chunk_size": plan.chunk_size, "prefetch": plan.prefetch,
                  "impl": plan.impl},
+        "feature_map": fitted.name,
         "solver_iterations": int(eig.iterations),
         "solver_resnorms": np.asarray(eig.resnorms),
         "degrees_min": deg_min,
         "degrees_max": deg_max,
-        "n_features_D": feats.params.n_features,
-        "nnz": z.n * cfg.n_grids,
+        "n_features_D": fitted.n_features,
+        "nnz": z.n * (fitted.n_grids if fitted.kind == "ell"
+                      else fitted.n_features),
     }
     diagnostics.update(z.residency_diagnostics(cfg))
     diagnostics.update(cluster_diag)
@@ -219,10 +244,15 @@ def execute(
         embedding = (u_hat.to_array()
                      if isinstance(u_hat, streaming.ChunkedDense)
                      else np.asarray(u_hat))
+    state = None
+    if keep_state:
+        state = {"z": z, "features": feats, "eig": eig, "u_hat": u_hat,
+                 "km": km, "plan": plan}
     return SCRBResult(
         labels=None if km is None else np.asarray(km.labels),
         embedding=embedding,
         singular_values=sigmas,
         timer=timer,
         diagnostics=diagnostics,
+        state=state,
     )

@@ -16,15 +16,25 @@ import jax.numpy as jnp
 from repro.kernels import ops
 
 
-def rb_degrees(idx: jax.Array, *, d: int, d_g: int, impl: str = "auto") -> jax.Array:
-    """deg_i = (1/R) Σ_g counts_g[idx[i,g]]  — Eq. 6 via two ELL products."""
+def rb_degrees_and_counts(
+    idx: jax.Array, *, d: int, d_g: int, impl: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """Eq. 6 via two ELL products, also returning the (D,) bin occupancies
+    (Zᵀ1 — the fitted-model degree dual) that the first product computes
+    anyway, so keeping them costs no extra pass over the data."""
     n, r = idx.shape
     ones = jnp.ones((n, 1), jnp.float32)
     inv_sqrt_r = 1.0 / jnp.sqrt(jnp.float32(r))
     scale = jnp.full((n,), inv_sqrt_r, jnp.float32)
     counts = ops.zt_matmul(idx, ones, scale, d, d_g=d_g, impl=impl)   # Zᵀ1 (D,1)
     deg = ops.z_matmul(idx, counts, scale, d_g=d_g, impl=impl)        # Z(Zᵀ1)
-    return deg[:, 0]
+    # undo the 1/√R value folding: raw occupancies (exact up to ~2 ulp)
+    return deg[:, 0], counts[:, 0] * jnp.sqrt(jnp.float32(r))
+
+
+def rb_degrees(idx: jax.Array, *, d: int, d_g: int, impl: str = "auto") -> jax.Array:
+    """deg_i = (1/R) Σ_g counts_g[idx[i,g]]  — Eq. 6 via two ELL products."""
+    return rb_degrees_and_counts(idx, d=d, d_g=d_g, impl=impl)[0]
 
 
 @jax.jit
@@ -64,6 +74,8 @@ class NormalizedAdjacency:
     d: int                # feature columns D
     d_g: int
     impl: str = "auto"
+    counts: "jax.Array | None" = None   # (D,) bin occupancies Zᵀ1 — the
+    # fitted-model degree dual, retained from the degree pass for free
 
     @property
     def n(self) -> int:
@@ -84,20 +96,28 @@ class NormalizedAdjacency:
         return self.matmat(self.rmatmat(u))
 
     def tree_flatten(self):
-        return (self.idx, self.rowscale, self.deg), (self.d, self.d_g, self.impl)
+        return ((self.idx, self.rowscale, self.deg, self.counts),
+                (self.d, self.d_g, self.impl))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
         d, d_g, impl = aux
-        return cls(*leaves, d=d, d_g=d_g, impl=impl)
+        idx, rowscale, deg, counts = leaves
+        return cls(idx, rowscale, deg, d=d, d_g=d_g, impl=impl, counts=counts)
 
 
 def build_normalized_adjacency(
-    idx: jax.Array, *, d: int, d_g: int, impl: str = "auto", eps: float = 1e-8
+    idx: jax.Array, *, d: int, d_g: int, impl: str = "auto", eps: float = 1e-8,
+    normalize: bool = True,
 ) -> NormalizedAdjacency:
     n, r = idx.shape
-    deg = rb_degrees(idx, d=d, d_g=d_g, impl=impl)
-    # deg_i ≥ 1/R·counts of own bin ≥ 1/R > 0 always (a point collides with
-    # itself); eps guards degenerate all-padded rows only.
-    rowscale = 1.0 / jnp.sqrt(jnp.float32(r) * jnp.maximum(deg, eps))
-    return NormalizedAdjacency(idx, rowscale, deg, d=d, d_g=d_g, impl=impl)
+    deg, counts = rb_degrees_and_counts(idx, d=d, d_g=d_g, impl=impl)
+    if normalize:
+        # deg_i ≥ 1/R·counts of own bin ≥ 1/R > 0 always (a point collides
+        # with itself); eps guards degenerate all-padded rows only.
+        rowscale = 1.0 / jnp.sqrt(jnp.float32(r) * jnp.maximum(deg, eps))
+    else:
+        # plain Z (values 1/√R), no Laplacian normalization (SV-style runs)
+        rowscale = jnp.full((n,), 1.0 / jnp.sqrt(jnp.float32(r)))
+    return NormalizedAdjacency(idx, rowscale, deg, d=d, d_g=d_g, impl=impl,
+                               counts=counts)

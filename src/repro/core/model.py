@@ -1,0 +1,226 @@
+"""SCRBModel — the fitted-model API over the plan-based executor.
+
+The RB feature matrix Z *implicitly* carries the similarity graph, so
+everything needed to embed and label a **new** point is already computed at
+fit time: the feature-map parameters, the degree dual (bin occupancies /
+Φᵀ1), the right singular subspace, and the k-means centroids. ``fit`` runs
+Algorithm 2 once through ``executor.execute`` (any plan: single/mesh ×
+device/host_chunked) and additionally materializes
+
+  V = Ẑᵀ U Σ⁻¹                  (D, K) right singular subspace —
+                                 one extra chunked O(NR) pass,
+  dual = Zᵀ 1                    (D,) out-of-sample degree oracle,
+
+after which ``transform``/``predict`` are the Nyström-style out-of-sample
+extension (standard for sampling-based SC — Pourkamali-Anaraki, "Scalable
+Spectral Clustering with Nyström Approximation"), fully jit-able and O(D·K)
+in state — **no O(N_train) array is stored or allocated**:
+
+  φ = map.transform(x_new)             row-local features
+  deg = φ · dual                       degree vs the *fitted* graph
+  ẑ = D̂^{-1/2} φ                      fitted-degree normalization
+  u = ẑ · V Σ⁻¹                        project into the singular subspace
+  û = u / ‖u‖                          row-normalize (Alg. 2 step 4)
+  label = argmin_k ‖û − c_k‖           nearest fitted centroid
+
+``save``/``load`` round-trip the model through one ``.npz`` (arrays) with a
+JSON metadata header (config + feature-map statics) — a fitted model is a
+deployable artifact; ``load().predict`` is bit-identical to the saved
+model's.
+
+``pipeline.sc_rb``, ``pipeline.spectral_embed`` and
+``distributed.sc_rb_distributed`` are thin wrappers over ``SCRBModel.fit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import executor as _executor, featuremap, streaming
+from repro.core.kmeans import row_normalize
+from repro.kernels import ops
+
+
+@functools.partial(jax.jit, static_argnames=("laplacian",))
+def _oos_embed(fm, dual, proj, x, *, laplacian: bool) -> jax.Array:
+    """The jit-able out-of-sample embedding of a feature-map pytree ``fm``:
+    transform → fitted-degree normalize → project onto V Σ⁻¹ → row-normalize.
+    """
+    feats = fm.transform(jnp.asarray(x, jnp.float32))
+    deg = fm.oos_degrees(feats, dual)
+    scale = fm.oos_rowscale(deg, laplacian=laplacian)
+    return row_normalize(fm.project(feats, scale, proj))
+
+
+@functools.partial(jax.jit, static_argnames=("laplacian", "impl"))
+def _oos_predict(fm, dual, proj, cents, x, *, laplacian: bool,
+                 impl: str) -> jax.Array:
+    u = _oos_embed(fm, dual, proj, x, laplacian=laplacian)
+    labels, _ = ops.kmeans_assign(u, cents, impl=impl)
+    return labels
+
+
+@dataclasses.dataclass
+class SCRBModel:
+    """A fitted SC_RB (or registry-baseline) model with out-of-sample
+    ``transform``/``predict`` — state is O(D·K), independent of N_train."""
+
+    config: _executor.SCRBConfig
+    feature_map: Any                    # fitted featuremap.FeatureMap
+    degree_dual: np.ndarray             # (D,) Zᵀ1 / Φᵀ1
+    right_vectors: np.ndarray           # (D, K) V = Ẑᵀ U Σ⁻¹
+    singular_values: np.ndarray         # (K,)
+    centroids: Optional[np.ndarray]     # (n_clusters, K); None if fit
+                                        # stopped before the k-means stage
+    laplacian_normalize: bool = True
+    fit_result: Optional[_executor.SCRBResult] = None   # train-run result
+    # (labels/embedding/timings); not serialized — the artifact stays O(D·K)
+
+    # -- fitting -----------------------------------------------------------
+    @classmethod
+    def fit(
+        cls,
+        x,
+        config: _executor.SCRBConfig,
+        *,
+        mesh=None,
+        plan: Optional[_executor.ExecutionPlan] = None,
+        final_stage: str = "kmeans",
+        keep_embedding: bool = True,
+    ) -> "SCRBModel":
+        """Run Algorithm 2 under any plan and keep the out-of-sample state.
+
+        ``mesh`` / ``plan`` select placement and residency exactly as for
+        ``executor.execute``; the train-run ``SCRBResult`` rides along as
+        ``model.fit_result`` (so the one-shot wrappers stay thin).
+        """
+        if plan is None:
+            plan = _executor.plan_from_config(config, mesh=mesh)
+        res = _executor.execute(x, config, plan, final_stage=final_stage,
+                                keep_embedding=keep_embedding,
+                                keep_state=True)
+        st = res.state
+        z, eig, km = st["z"], st["eig"], st["km"]
+        fitted = st["features"].fmap
+        with res.timer.stage("oos_state"):
+            sig = np.asarray(res.singular_values, np.float32)
+            inv_sig = np.where(sig > 1e-6, 1.0 / np.maximum(sig, 1e-30),
+                               0.0).astype(np.float32)
+            # V = Ẑᵀ U Σ⁻¹ — one extra chunked O(NR) pass over the fitted
+            # representation (ChunkedDense-aware rmatvec on streaming plans,
+            # psum'd Ẑᵀ on mesh plans)
+            v = np.asarray(z.rmatvec(eig.vectors), np.float32) \
+                * inv_sig[None, :]
+            dual = np.asarray(z.degree_dual(), np.float32)
+        res.state = None          # drop the O(N) internals; model is O(D·K)
+        return cls(
+            config=config,
+            feature_map=fitted,
+            degree_dual=dual,
+            right_vectors=v,
+            singular_values=sig,
+            centroids=None if km is None
+            else np.asarray(km.centroids, np.float32),
+            laplacian_normalize=plan.laplacian_normalize,
+            fit_result=res,
+        )
+
+    # -- inference ---------------------------------------------------------
+    @property
+    def _projection(self) -> np.ndarray:
+        """V Σ⁻¹ (D, K): Ẑ_new · (V Σ⁻¹) ≈ U_new (Eq. 7 out-of-sample)."""
+        sig = self.singular_values
+        inv_sig = np.where(sig > 1e-6, 1.0 / np.maximum(sig, 1e-30),
+                           0.0).astype(np.float32)
+        return self.right_vectors * inv_sig[None, :]
+
+    def transform(self, x, *, batch_size: Optional[int] = None) -> np.ndarray:
+        """Out-of-sample spectral embedding (n_new, K), streamed in batches
+        of ``batch_size`` rows (peak device residency O(batch·(R+K)))."""
+        proj = jnp.asarray(self._projection)
+        dual = jnp.asarray(self.degree_dual)
+        outs = [
+            np.asarray(_oos_embed(self.feature_map, dual, proj, c,
+                                  laplacian=self.laplacian_normalize))
+            for c in streaming.as_row_chunks(x, batch_size)
+        ]
+        return np.concatenate(outs, axis=0)
+
+    def predict(self, x, *, batch_size: Optional[int] = None) -> np.ndarray:
+        """Nearest-fitted-centroid labels for new points, (n_new,) int32."""
+        if self.centroids is None:
+            raise ValueError(
+                "model has no centroids (fit stopped before the k-means "
+                "stage); use transform() or refit with final_stage='kmeans'")
+        proj = jnp.asarray(self._projection)
+        dual = jnp.asarray(self.degree_dual)
+        cents = jnp.asarray(self.centroids)
+        outs = [
+            np.asarray(_oos_predict(self.feature_map, dual, proj, cents, c,
+                                    laplacian=self.laplacian_normalize,
+                                    impl=self.config.impl))
+            for c in streaming.as_row_chunks(x, batch_size)
+        ]
+        return np.concatenate(outs, axis=0)
+
+    @property
+    def nbytes(self) -> int:
+        """Serialized state size — independent of N_train by construction."""
+        arrays = [self.degree_dual, self.right_vectors, self.singular_values]
+        if self.centroids is not None:
+            arrays.append(self.centroids)
+        arrays.extend(self.feature_map.state_dict().values())
+        return int(sum(np.asarray(a).nbytes for a in arrays))
+
+    # -- serialization -----------------------------------------------------
+    def save(self, path: str) -> None:
+        """One-file artifact: npz arrays + JSON metadata header."""
+        cfg = dataclasses.asdict(self.config)
+        if cfg.get("block_rows") is not None:
+            cfg["block_rows"] = dict(cfg["block_rows"])
+        meta = {
+            "format_version": 1,
+            "config": cfg,
+            "laplacian_normalize": bool(self.laplacian_normalize),
+            "has_centroids": self.centroids is not None,
+            "feature_map": self.feature_map.meta_dict(),
+        }
+        arrays = {
+            "degree_dual": self.degree_dual,
+            "right_vectors": self.right_vectors,
+            "singular_values": self.singular_values,
+        }
+        if self.centroids is not None:
+            arrays["centroids"] = self.centroids
+        for k, v in self.feature_map.state_dict().items():
+            arrays[f"fm_{k}"] = v
+        meta_bytes = np.frombuffer(json.dumps(meta).encode("utf-8"),
+                                   dtype=np.uint8)
+        with open(path, "wb") as f:
+            np.savez(f, _meta=meta_bytes, **arrays)
+
+    @classmethod
+    def load(cls, path: str) -> "SCRBModel":
+        with np.load(path, allow_pickle=False) as npz:
+            meta = json.loads(bytes(npz["_meta"].tobytes()).decode("utf-8"))
+            if meta.get("format_version") != 1:
+                raise ValueError(
+                    f"unsupported model format {meta.get('format_version')!r}")
+            fm_arrays = {k[3:]: npz[k] for k in npz.files
+                         if k.startswith("fm_")}
+            fitted = featuremap.load_fitted(meta["feature_map"], fm_arrays)
+            return cls(
+                config=_executor.SCRBConfig(**meta["config"]),
+                feature_map=fitted,
+                degree_dual=npz["degree_dual"],
+                right_vectors=npz["right_vectors"],
+                singular_values=npz["singular_values"],
+                centroids=npz["centroids"] if meta["has_centroids"] else None,
+                laplacian_normalize=meta["laplacian_normalize"],
+            )

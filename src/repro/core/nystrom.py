@@ -1,18 +1,20 @@
-"""Nyström landmark features — the SC_Nys / KK_RS / SC_LSC baseline substrate.
+"""Dense kernel blocks for the landmark-based feature maps.
 
-Φ = K_nm · K_mm^{-1/2} gives dense features with Φ Φᵀ ≈ W (Williams & Seeger
-2001). LSC (Chen & Cai 2011) instead builds a sparse bipartite affinity to the
-s nearest anchors with kernel weights and row-normalizes.
+The Nyström features Φ = K_nm · K_mm^{-1/2} (Williams & Seeger 2001) and the
+LSC bipartite affinities (Chen & Cai 2011) live as registered maps in
+``repro.core.featuremap`` (``NystromMap`` / ``LSCMap``) so they share the
+fit/transform/out-of-sample protocol with Random Binning; this module keeps
+the kernel-block primitive they are built on.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
 
-def _pairwise_kernel(x: jax.Array, y: jax.Array, sigma: float, kernel: str) -> jax.Array:
+def pairwise_kernel(x: jax.Array, y: jax.Array, sigma: float, kernel: str) -> jax.Array:
+    """Dense kernel block k(x_i, y_j) — shared by the Nyström/LSC feature
+    maps (``repro.core.featuremap``) and the exact-SC baseline."""
     if kernel == "gaussian":
         sq = (
             jnp.sum(x * x, -1)[:, None]
@@ -24,53 +26,3 @@ def _pairwise_kernel(x: jax.Array, y: jax.Array, sigma: float, kernel: str) -> j
         l1 = jnp.sum(jnp.abs(x[:, None, :] - y[None, :, :]), -1)
         return jnp.exp(-l1 / sigma)
     raise ValueError(kernel)
-
-
-@functools.partial(jax.jit, static_argnames=("n_landmarks", "sigma", "kernel"))
-def nystrom_features(
-    key: jax.Array, x: jax.Array, *, n_landmarks: int, sigma: float,
-    kernel: str = "laplacian", eps: float = 1e-6,
-) -> jax.Array:
-    """Dense Nyström feature matrix (N, m) with random landmarks."""
-    n = x.shape[0]
-    pick = jax.random.choice(key, n, (n_landmarks,), replace=False)
-    lm = x[pick]
-    k_nm = _pairwise_kernel(x, lm, sigma, kernel)          # (N, m)
-    k_mm = _pairwise_kernel(lm, lm, sigma, kernel)         # (m, m)
-    lam, v = jnp.linalg.eigh(k_mm)
-    inv_sqrt = jnp.where(lam > eps, 1.0 / jnp.sqrt(jnp.maximum(lam, eps)), 0.0)
-    return k_nm @ (v * inv_sqrt[None, :]) @ v.T
-
-
-@functools.partial(
-    jax.jit, static_argnames=("n_anchors", "n_nearest", "sigma", "kernel")
-)
-def lsc_bipartite_features(
-    key: jax.Array, x: jax.Array, *, n_anchors: int, n_nearest: int,
-    sigma: float, kernel: str = "laplacian",
-) -> jax.Array:
-    """LSC sparse bipartite affinity Ẑ (N, p), s-nearest anchors, row-stochastic.
-
-    Anchors via one cheap Lloyd pass over a random init (the paper's LSC uses
-    k-means anchors). Returned dense for the downstream small-p SVD; the
-    sparsity only matters at p ≫ K which these benchmarks never hit.
-    """
-    n = x.shape[0]
-    pick = jax.random.choice(key, n, (n_anchors,), replace=False)
-    anchors = x[pick]
-    for _ in range(3):  # few Lloyd refinements
-        d2 = (
-            jnp.sum(x * x, -1)[:, None]
-            - 2.0 * x @ anchors.T
-            + jnp.sum(anchors * anchors, -1)[None, :]
-        )
-        lab = jnp.argmin(d2, -1)
-        cnt = jax.ops.segment_sum(jnp.ones((n,), x.dtype), lab, num_segments=n_anchors)
-        s = jax.ops.segment_sum(x, lab, num_segments=n_anchors)
-        anchors = jnp.where((cnt > 0)[:, None], s / jnp.maximum(cnt, 1.0)[:, None], anchors)
-    aff = _pairwise_kernel(x, anchors, sigma, kernel)       # (N, p)
-    # keep s nearest anchors per row
-    thresh = jax.lax.top_k(aff, n_nearest)[0][:, -1]        # s-th largest
-    kept = jnp.where(aff >= thresh[:, None], aff, 0.0)
-    row = jnp.sum(kept, -1, keepdims=True)
-    return kept / jnp.maximum(row, 1e-12)

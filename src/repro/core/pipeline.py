@@ -14,6 +14,12 @@ pipeline), an int selects host-chunked streaming for out-of-core N; the
 SPMD entry point lives in ``repro.core.distributed``. Each stage is timed
 independently (paper Fig. 4 reports the per-stage breakdown); total is
 linear in N and in R.
+
+Both entry points are thin compatibility wrappers over the fitted-model API
+(``repro.core.model.SCRBModel``) — ``sc_rb(x, cfg)`` is exactly
+``SCRBModel.fit(x, cfg).fit_result``. Prefer ``SCRBModel.fit`` when you
+want to label or embed points that arrive *after* fitting (batch ``predict``
+without refitting) or to ``save()`` a deployable artifact.
 """
 from __future__ import annotations
 
@@ -26,6 +32,7 @@ import jax.numpy as jnp
 from repro.core.executor import (  # noqa: F401
     ExecutionPlan, SCRBConfig, SCRBResult, execute, plan_from_config,
 )
+from repro.core.model import SCRBModel
 from repro.utils import StageTimer
 
 
@@ -34,9 +41,10 @@ def sc_rb(x: jax.Array, config: SCRBConfig) -> SCRBResult:
 
     With ``config.chunk_size`` set, every stage streams host-resident row
     chunks (see ``repro.core.rowmatrix.HostChunkedRows``) — same algorithm,
-    bounded device memory.
+    bounded device memory. Equivalent to ``SCRBModel.fit(x, config)`` with
+    only the train-run result kept.
     """
-    return execute(x, config, plan_from_config(config))
+    return SCRBModel.fit(x, config).fit_result
 
 
 @dataclasses.dataclass
@@ -63,8 +71,8 @@ def spectral_embed(x: jax.Array, config: SCRBConfig) -> SpectralEmbedding:
     per-stage timings. The result unpacks as ``(embedding, singular_values)``
     for backwards compatibility.
     """
-    res = execute(x, config, plan_from_config(config),
-                  final_stage="normalize")
+    model = SCRBModel.fit(x, config, final_stage="normalize")
+    res = model.fit_result
     return SpectralEmbedding(
         jnp.asarray(res.embedding),
         jnp.asarray(res.singular_values),

@@ -44,19 +44,18 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import eigensolver, graph, rb, streaming
+from repro.core import eigensolver, featuremap, graph, streaming
 from repro.core.kmeans import kmeans as _kmeans, streaming_kmeans
 from repro.kernels import ops
-from repro.utils import fold_key, prefetch_to_device
+from repro.utils import prefetch_to_device
 
 
 @dataclasses.dataclass(frozen=True)
-class RBFeatures:
-    """Stage-1 output: RB grid parameters + the representation's ELL payload
-    (device idx / host idx chunks / sharded idx)."""
+class FittedFeatures:
+    """Stage-1 output: a *fitted* feature map + the representation's feature
+    payload (device idx/Φ, host chunks, or sharded idx)."""
 
-    params: rb.RBParams
-    d_g: int
+    fmap: Any       # fitted repro.core.featuremap.FeatureMap
     payload: Any
 
 
@@ -74,6 +73,7 @@ class RowMatrix(Protocol):
     @property
     def n(self) -> int: ...
     def degree_range(self) -> Tuple[float, float]: ...
+    def degree_dual(self) -> np.ndarray: ...   # (D,) out-of-sample degrees
     def matvec(self, v): ...          # Ẑ v : (D, K) → tall
     def rmatvec(self, u): ...         # Ẑᵀ u : tall → (D, K)
     def gram(self, u): ...            # (Ẑ Ẑᵀ) u : tall → tall
@@ -90,26 +90,35 @@ class RowMatrix(Protocol):
 @dataclasses.dataclass
 class DeviceRows:
     """Whole-array residency on one device (bit-identical to the seed
-    single-shot pipeline: same ops, same order, same keys)."""
+    single-shot pipeline: same ops, same order, same keys).
+
+    ``adj`` is either a ``graph.NormalizedAdjacency`` (ELL feature maps) or
+    a ``featuremap.NormalizedDenseFeatures`` (dense maps) — same mat-vec
+    surface, so every method below is representation-agnostic.
+    """
 
     kind = "device"
-    adj: graph.NormalizedAdjacency
+    adj: Any
 
     @classmethod
-    def rb_features(cls, x, cfg, plan, key) -> RBFeatures:
+    def fit_transform(cls, x, fm, cfg, plan, key) -> FittedFeatures:
         x = jnp.asarray(x)
-        d_g = cfg.d_g or rb.suggest_d_g(x, cfg.sigma, key=fold_key(key, "probe"))
-        params = rb.make_rb_params(
-            fold_key(key, "rb"), cfg.n_grids, x.shape[1], cfg.sigma, d_g)
-        idx = jax.block_until_ready(rb.rb_transform(x, params, impl=plan.impl))
-        return RBFeatures(params, d_g, idx)
+        fitted = fm.fit(key, x)
+        payload = jax.block_until_ready(fitted.transform(x))
+        return FittedFeatures(fitted, payload)
 
     @classmethod
-    def from_features(cls, feats: RBFeatures, cfg, plan) -> "DeviceRows":
-        adj = graph.build_normalized_adjacency(
-            feats.payload, d=feats.params.n_features, d_g=feats.d_g,
-            impl=plan.impl)
-        jax.block_until_ready(adj.rowscale)
+    def from_features(cls, feats: FittedFeatures, cfg, plan) -> "DeviceRows":
+        fm = feats.fmap
+        if fm.kind == "ell":
+            adj = graph.build_normalized_adjacency(
+                feats.payload, d=fm.n_features, d_g=fm.d_g,
+                impl=plan.impl, normalize=plan.laplacian_normalize)
+            jax.block_until_ready(adj.rowscale)
+        else:
+            adj = featuremap.build_normalized_dense(
+                feats.payload, laplacian=plan.laplacian_normalize)
+            jax.block_until_ready(adj.rowscale)
         return cls(adj)
 
     @property
@@ -138,6 +147,18 @@ class DeviceRows:
     def reduce(self, fn, init, *tall):
         return fn(init, *tall)
 
+    def degree_dual(self) -> np.ndarray:
+        """The O(D) vector the out-of-sample degree of a new point is read
+        from: bin occupancies Zᵀ1 for ELL maps (retained from the degree
+        pass — no extra sweep), Φᵀ1 for dense maps."""
+        if isinstance(self.adj, featuremap.NormalizedDenseFeatures):
+            return np.asarray(self.adj.colsum, np.float32)
+        if self.adj.counts is not None:
+            return np.asarray(self.adj.counts, np.float32)
+        counts = ops.bin_counts(self.adj.idx, d=self.adj.d, d_g=self.adj.d_g,
+                                impl=self.adj.impl)
+        return np.asarray(counts).astype(np.float32)
+
     def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
         eig = eigensolver.top_k_eigenpairs(
             self.adj.gram_matvec, self.n, k, key,
@@ -162,51 +183,80 @@ class DeviceRows:
 
 @dataclasses.dataclass
 class HostChunkedRows:
-    """Host-resident row chunks; no stage allocates an O(N) device array."""
+    """Host-resident row chunks; no stage allocates an O(N) device array.
+
+    ``store`` is either a ``streaming.ChunkedELL`` (ELL feature maps) or a
+    ``featuremap.ChunkedDenseFeatures`` (dense maps) — same chunk-sweep
+    surface (prefetched uploads, ``gram_matvec_chunked``, ``h2d_stats``).
+    """
 
     kind = "host_chunked"
-    ell: streaming.ChunkedELL
+    store: Any
 
     @classmethod
-    def rb_features(cls, x, cfg, plan, key) -> RBFeatures:
+    def fit_transform(cls, x, fm, cfg, plan, key) -> FittedFeatures:
         x_chunks = streaming.as_row_chunks(x, plan.chunk_size)
-        dim = x_chunks[0].shape[1]
-        d_g = cfg.d_g or rb.suggest_d_g(x_chunks, cfg.sigma,
-                                        key=fold_key(key, "probe"))
-        params = rb.make_rb_params(
-            fold_key(key, "rb"), cfg.n_grids, dim, cfg.sigma, d_g)
-        idx_chunks = streaming.chunked_rb_transform(x_chunks, params,
-                                                    impl=plan.impl)
-        return RBFeatures(params, d_g, idx_chunks)
+        fitted = fm.fit(key, x_chunks)
+        # transforms are row-local ⇒ bit-identical to the single-shot
+        # transform for any chunking; chunk outputs are offloaded to host
+        payload = tuple(
+            np.asarray(fitted.transform(jnp.asarray(c, jnp.float32)))
+            for c in x_chunks)
+        return FittedFeatures(fitted, payload)
 
     @classmethod
-    def from_features(cls, feats: RBFeatures, cfg, plan) -> "HostChunkedRows":
-        ell = streaming.build_chunked_adjacency(
-            feats.payload, d=feats.params.n_features, d_g=feats.d_g,
-            impl=plan.impl, prefetch=plan.prefetch)
-        return cls(ell)
+    def from_features(cls, feats, cfg, plan) -> "HostChunkedRows":
+        fm = feats.fmap
+        if fm.kind == "ell":
+            store = streaming.build_chunked_adjacency(
+                feats.payload, d=fm.n_features, d_g=fm.d_g,
+                impl=plan.impl, prefetch=plan.prefetch,
+                normalize=plan.laplacian_normalize)
+        else:
+            store = featuremap.build_chunked_dense(
+                feats.payload, laplacian=plan.laplacian_normalize,
+                prefetch=plan.prefetch)
+        return cls(store)
+
+    @property
+    def ell(self):
+        """Back-compat alias for the storage layer (historically always a
+        ``ChunkedELL``)."""
+        return self.store
 
     @property
     def n(self) -> int:
-        return self.ell.n
+        return self.store.n
 
     @property
     def deg(self) -> np.ndarray:
-        return self.ell.deg
+        return self.store.deg
 
     def degree_range(self) -> Tuple[float, float]:
-        return float(np.min(self.ell.deg)), float(np.max(self.ell.deg))
+        return float(np.min(self.store.deg)), float(np.max(self.store.deg))
+
+    def degree_dual(self) -> np.ndarray:
+        if isinstance(self.store, featuremap.ChunkedDenseFeatures):
+            return np.asarray(self.store.colsum, np.float32)
+        if self.store.counts is not None:
+            return np.asarray(self.store.counts).astype(np.float32)
+        counts = streaming.chunked_bin_counts(
+            self.store.idx_chunks, d=self.store.d, d_g=self.store.d_g,
+            impl=self.store.impl, prefetch=self.store.prefetch)
+        return np.asarray(counts).astype(np.float32)
 
     def matvec(self, v):
-        return self.ell.matmat(v)
+        return self.store.matmat(v)
 
     def rmatvec(self, u):
-        return self.ell.rmatmat(u)
+        if isinstance(u, streaming.ChunkedDense):
+            return self.store.rmatmat_chunked(u)
+        return self.store.rmatmat(u)
 
     def gram(self, u):
         if isinstance(u, streaming.ChunkedDense):
-            return self.ell.gram_matvec_chunked(u)
-        return self.ell.gram_matvec(u)
+            return self.store.gram_matvec_chunked(u)
+        return self.store.gram_matvec(u)
 
     def _tall_chunks(self, tall):
         if isinstance(tall, streaming.ChunkedDense):
@@ -287,47 +337,50 @@ class MeshRows:
     impl: str = "auto"
     chunk_size: Optional[int] = None
     compress: bool = False
+    counts: Optional[jax.Array] = None   # (D,) replicated Zᵀ1 (degree dual)
 
     @classmethod
-    def rb_features(cls, x, cfg, plan, key) -> RBFeatures:
+    def fit_transform(cls, x, fm, cfg, plan, key) -> FittedFeatures:
+        if fm.kind != "ell":
+            raise ValueError(
+                f"placement='mesh' currently supports ELL feature maps only "
+                f"(got {fm.name!r} of kind {fm.kind!r}); run dense maps "
+                f"under placement='single'")
         mesh = plan.mesh
-        d_g = cfg.d_g or rb.suggest_d_g(np.asarray(x), cfg.sigma,
-                                        key=fold_key(key, "probe"))
-        params = rb.make_rb_params(
-            fold_key(key, "rb"), cfg.n_grids, np.asarray(x).shape[1],
-            cfg.sigma, d_g)
+        fitted = fm.fit(key, np.asarray(x))
         row_shard = cls._row_sharding(mesh)
         xs = jax.device_put(jnp.asarray(x, jnp.float32), row_shard)
         with mesh:
-            idx = jax.jit(
-                lambda a: rb.rb_transform(a, params, impl=plan.impl),
-                out_shardings=row_shard)(xs)
+            idx = jax.jit(fitted.transform, out_shardings=row_shard)(xs)
             idx = jax.block_until_ready(idx)
-        return RBFeatures(params, d_g, idx)
+        return FittedFeatures(fitted, idx)
 
     @classmethod
-    def from_features(cls, feats: RBFeatures, cfg, plan) -> "MeshRows":
-        from repro.core.distributed import make_gram_matvec
+    def from_features(cls, feats: FittedFeatures, cfg, plan) -> "MeshRows":
+        from repro.core.distributed import make_degree_pass
+        fm = feats.fmap
         mesh = plan.mesh
         idx = feats.payload
         n = idx.shape[0]
-        d = feats.params.n_features
+        d = fm.n_features
         scale_shard = cls._vec_sharding(mesh)
-        ones = jax.device_put(jnp.ones((n, 1), jnp.float32),
-                              cls._row_sharding(mesh))
-        inv_sqrt_r = jnp.full((n,), 1.0 / np.sqrt(cfg.n_grids), jnp.float32)
-        inv_sqrt_r = jax.device_put(inv_sqrt_r, scale_shard)
         with mesh:
-            deg_mv = make_gram_matvec(mesh, idx, inv_sqrt_r, d, feats.d_g,
-                                      plan.impl, compress=plan.collective_compress,
-                                      chunk_size=plan.chunk_size)
-            deg = jax.jit(lambda: deg_mv(ones)[:, 0])()
-            rowscale = 1.0 / jnp.sqrt(cfg.n_grids * jnp.maximum(deg, 1e-8))
+            # one pass yields both the degrees and the replicated (D,) bin
+            # occupancies — the fitted-model degree dual, kept for free
+            deg, counts = jax.jit(make_degree_pass(
+                mesh, idx, d, fm.d_g, plan.impl,
+                compress=plan.collective_compress,
+                chunk_size=plan.chunk_size))()
+            if plan.laplacian_normalize:
+                rowscale = 1.0 / jnp.sqrt(cfg.n_grids * jnp.maximum(deg, 1e-8))
+            else:
+                rowscale = jnp.full((n,), 1.0 / np.sqrt(cfg.n_grids),
+                                    jnp.float32)
             rowscale = jax.block_until_ready(
                 jax.lax.with_sharding_constraint(rowscale, scale_shard))
-        return cls(mesh, idx, rowscale, deg, d=d, d_g=feats.d_g,
+        return cls(mesh, idx, rowscale, deg, d=d, d_g=fm.d_g,
                    impl=plan.impl, chunk_size=plan.chunk_size,
-                   compress=plan.collective_compress)
+                   compress=plan.collective_compress, counts=counts)
 
     # -- sharding helpers ---------------------------------------------------
     @staticmethod
@@ -405,18 +458,48 @@ class MeshRows:
             return make_sharded_reduce(
                 self.mesh, fn, chunk_size=self.chunk_size)(init, *tall)
 
-    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
-        b = eigensolver.lobpcg_block_width(self.n, k, cfg.solver_buffer)
+    def degree_dual(self) -> np.ndarray:
+        """Bin occupancies Zᵀ1, retained from the degree pass (no extra
+        collective sweep) — only the (D,) dual leaves the mesh, never O(N)
+        state. Falls back to one psum'd Ẑᵀ pass if not retained."""
+        if self.counts is not None:
+            return np.asarray(self.counts, np.float32)
+        from repro.core.distributed import make_zt_matvec
         with self.mesh:
-            matvec = self._gram_fn()
-            x0 = jax.device_put(
-                jax.random.normal(key, (self.n, b), jnp.float32),
-                self._row_sharding(self.mesh))
-            eig = jax.jit(functools.partial(
-                eigensolver.lobpcg, matvec,
-                max_iters=cfg.solver_iters, tol=cfg.solver_tol))(x0)
-            u = jax.block_until_ready(eig.vectors[:, :k])
-        return eigensolver.EigResult(eig.theta[:k], u, eig.resnorms[:k],
+            ones_scale = jax.device_put(
+                jnp.ones((self.n,), jnp.float32), self._vec_sharding(self.mesh))
+            ones = jax.device_put(jnp.ones((self.n, 1), jnp.float32),
+                                  self._row_sharding(self.mesh))
+            counts = make_zt_matvec(self.mesh, self.idx, ones_scale, self.d,
+                                    self.d_g, self.impl,
+                                    chunk_size=self.chunk_size)(ones)
+        return np.asarray(counts)[:, 0].astype(np.float32)
+
+    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
+        if cfg.solver in ("lobpcg", "lobpcg_host"):
+            b = eigensolver.lobpcg_block_width(self.n, k, cfg.solver_buffer)
+            with self.mesh:
+                matvec = self._gram_fn()
+                x0 = jax.device_put(
+                    jax.random.normal(key, (self.n, b), jnp.float32),
+                    self._row_sharding(self.mesh))
+                eig = jax.jit(functools.partial(
+                    eigensolver.lobpcg, matvec,
+                    max_iters=cfg.solver_iters, tol=cfg.solver_tol))(x0)
+                u = jax.block_until_ready(eig.vectors[:, :k])
+            return eigensolver.EigResult(eig.theta[:k], u, eig.resnorms[:k],
+                                         eig.iterations)
+        # lanczos / subspace (the Fig. 3 solver-study baselines): driven
+        # eagerly against the shard_map'd Gram mat-vec — same collective
+        # schedule per mat-vec; only the small Krylov/Ritz algebra differs.
+        with self.mesh:
+            eig = eigensolver.top_k_eigenpairs(
+                self._gram_fn(), self.n, k, key, solver=cfg.solver,
+                max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+                buffer=cfg.solver_buffer)
+            vectors = jax.block_until_ready(jax.device_put(
+                eig.vectors, self._row_sharding(self.mesh)))
+        return eigensolver.EigResult(eig.theta, vectors, eig.resnorms,
                                      eig.iterations)
 
     def cluster(self, key, u_hat, cfg) -> Tuple[Any, dict]:

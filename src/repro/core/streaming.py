@@ -171,6 +171,8 @@ class ChunkedELL:
     h2d_stats: dict = dataclasses.field(default_factory=dict, compare=False)
     # ^ measured upload sizes (utils.prefetch_to_device), mutated in place
     #   across sweeps — the runtime check behind the residency diagnostics
+    counts: Optional[np.ndarray] = None      # (D,) int32 bin occupancies —
+    # the fitted-model degree dual (kept so SCRBModel.fit needs no extra pass)
 
     @property
     def n(self) -> int:
@@ -232,6 +234,20 @@ class ChunkedELL:
     def gram_matvec(self, u: jax.Array) -> jax.Array:
         """(Ẑ Ẑᵀ) u — eager streaming operator for ``lobpcg_host``."""
         return self.matmat(self.rmatmat(u))
+
+    def rmatmat_chunked(self, u: "ChunkedDense") -> jax.Array:
+        """Ẑᵀ u with a host-chunked ``u`` aligned to the ELL chunking: one
+        (D, K) accumulator, one chunk pair on device at a time — the pass
+        that materializes the fitted model's right singular subspace."""
+        if u.chunk_sizes != self.chunk_sizes:
+            raise ValueError(
+                f"chunking mismatch: u has {u.chunk_sizes}, "
+                f"ELL has {self.chunk_sizes}")
+        q = jnp.zeros((self.d, u.k), jnp.float32)
+        for ic, sc, uc in self._stream(u.chunks):
+            q = q + ops.zt_matmul(ic, uc, sc, self.d, d_g=self.d_g,
+                                  impl=self.impl)
+        return q
 
     def gram_matvec_chunked(self, u: ChunkedDense) -> ChunkedDense:
         """(Ẑ Ẑᵀ) u with host-chunked input *and* output.
@@ -331,6 +347,7 @@ def build_chunked_adjacency(
     impl: str = "auto",
     eps: float = 1e-8,
     prefetch: bool = True,
+    normalize: bool = True,
 ) -> ChunkedELL:
     """Streaming analogue of ``graph.build_normalized_adjacency``."""
     idx_chunks = tuple(np.asarray(ic) for ic in idx_chunks)
@@ -343,13 +360,17 @@ def build_chunked_adjacency(
                                  stats=h2d_stats):
         deg_c = np.asarray(graph.degrees_from_counts(ic, counts))
         deg_chunks.append(deg_c)
-        scale_chunks.append(
-            (1.0 / np.sqrt(r * np.maximum(deg_c, np.float32(eps))))
-            .astype(np.float32))
+        if normalize:
+            scale_chunks.append(
+                (1.0 / np.sqrt(r * np.maximum(deg_c, np.float32(eps))))
+                .astype(np.float32))
+        else:
+            scale_chunks.append(
+                np.full_like(deg_c, 1.0 / np.sqrt(r), dtype=np.float32))
     return ChunkedELL(
         idx_chunks, tuple(scale_chunks), d=d, d_g=d_g, impl=impl,
         deg=np.concatenate(deg_chunks), prefetch=prefetch,
-        h2d_stats=h2d_stats)
+        h2d_stats=h2d_stats, counts=np.asarray(counts))
 
 
 # --------------------------------------------------------------------------

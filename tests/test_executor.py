@@ -156,6 +156,7 @@ def test_plan_representation_mapping():
 def test_rowmatrix_map_reduce_parity(data):
     """map_row_chunks / reduce agree between the device and host-chunked
     representations (the contract the shared stages are written against)."""
+    from repro.core import featuremap
     from repro.core.kmeans import row_normalize
     x, _ = data
     cfg = SCRBConfig(**BASE, impl="xla")
@@ -164,14 +165,27 @@ def test_rowmatrix_map_reduce_parity(data):
     ch_plan = plan_from_config(ch_cfg)
     import jax
     key = jax.random.PRNGKey(0)
-    feats_d = DeviceRows.rb_features(jnp.asarray(x), cfg, dev_plan, key)
+    fm = featuremap.from_config(cfg, impl="xla")
+    feats_d = DeviceRows.fit_transform(jnp.asarray(x), fm, cfg, dev_plan, key)
     z_d = DeviceRows.from_features(feats_d, cfg, dev_plan)
-    feats_c = HostChunkedRows.rb_features(np.asarray(x), ch_cfg, ch_plan, key)
+    feats_c = HostChunkedRows.fit_transform(np.asarray(x), fm, ch_cfg,
+                                            ch_plan, key)
     z_c = HostChunkedRows.from_features(feats_c, ch_cfg, ch_plan)
 
     u = np.asarray(jax.random.normal(key, (x.shape[0], 3), jnp.float32))
     from repro.core.streaming import ChunkedDense
-    uc = ChunkedDense.from_array(u, z_c.ell.chunk_sizes)
+    uc = ChunkedDense.from_array(u, z_c.store.chunk_sizes)
+
+    # the representations agree on the fitted-model degree dual: the device
+    # path keeps float Zᵀ1 from the degree pass (±ulp of the chunked path's
+    # exact integer counts)
+    np.testing.assert_allclose(z_d.degree_dual(), z_c.degree_dual(),
+                               rtol=1e-5)
+    # rmatvec with a host-chunked tall operand matches the device rmatvec
+    # (the pass SCRBModel.fit materializes the right subspace with)
+    np.testing.assert_allclose(
+        np.asarray(z_c.rmatvec(uc)), np.asarray(z_d.rmatvec(jnp.asarray(u))),
+        rtol=1e-4, atol=1e-5)
 
     want = np.asarray(z_d.map_row_chunks(row_normalize, jnp.asarray(u)))
     got = z_c.map_row_chunks(row_normalize, uc).to_array()
@@ -212,6 +226,17 @@ labels, timer = sc_rb_distributed(x, SCRBConfig(**base), mesh)
 cfg_c = SCRBConfig(**base, chunk_size=64)
 res = executor.execute(x, cfg_c, executor.plan_from_config(cfg_c, mesh=mesh))
 
+# solver routing: lanczos/subspace run through the mesh plan too (the
+# eager drivers against the shard_map'd Gram mat-vec) and agree with the
+# single-device run of the same solver
+solver_parity = {}
+for solver in ("subspace", "lanczos"):
+    cfg_s = SCRBConfig(**base, solver=solver, solver_iters=60)
+    ref_s = sc_rb(jnp.asarray(x), cfg_s)
+    res_s = executor.execute(x, cfg_s,
+                             executor.plan_from_config(cfg_s, mesh=mesh))
+    solver_parity[solver] = metrics.accuracy(res_s.labels, ref_s.labels)
+
 emb_dots = [float(np.dot(ref.embedding[:, j], res.embedding[:, j]))
             for j in range(ref.embedding.shape[1])]
 emb_err = max(
@@ -223,6 +248,7 @@ print(json.dumps({
     "agree_chunked": metrics.accuracy(res.labels, ref.labels),
     "emb_err": emb_err,
     "stages": sorted(timer.times),
+    "solver_parity": solver_parity,
     "diag": {k: v for k, v in res.diagnostics.items()
              if k.startswith(("kmeans_", "shard", "n_shards", "ell_"))},
     "plan": res.diagnostics["plan"],
@@ -249,8 +275,17 @@ def test_mesh_plans_match_single_shot(mesh_result):
     assert r["agree_mesh"] >= 0.99
     assert r["agree_chunked"] >= 0.99
     assert r["emb_err"] < 5e-2
+    # sc_rb_distributed is SCRBModel.fit-backed now: the five Alg.-2 stages
+    # plus the O(NR) out-of-sample state pass
     assert set(r["stages"]) == {"rb_features", "degrees", "svd",
-                                "normalize", "kmeans"}
+                                "normalize", "kmeans", "oos_state"}
+
+
+def test_mesh_routes_all_solvers(mesh_result):
+    """cfg.solver lanczos/subspace route through the mesh plan (ROADMAP item)
+    and reproduce the single-device labels for the same solver."""
+    for solver, agree in mesh_result["solver_parity"].items():
+        assert agree >= 0.97, (solver, agree)
 
 
 def test_mesh_kmeans_residency_is_o_shard_chunk(mesh_result):

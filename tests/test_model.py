@@ -1,0 +1,129 @@
+"""Fitted-model API: out-of-sample consistency, serialization, and the
+O(D·K)-state guarantee of ``repro.core.model.SCRBModel``."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SCRBConfig, SCRBModel, metrics, sc_rb
+from repro.core.executor import ExecutionPlan
+from repro.data.synthetic import make_blobs
+
+# d_g pinned so the fitted state is shape-identical across fit sizes (the
+# auto-probe would otherwise pick data-dependent hash widths)
+BASE = dict(n_clusters=4, n_grids=64, sigma=1.5, d_g=1024,
+            solver_tol=1e-3, kmeans_replicates=2, seed=0)
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    return make_blobs(800, 6, 4, seed=0)
+
+
+CHUNKINGS = [pytest.param(None, id="device"),
+             pytest.param(200, id="host_chunked")]
+
+
+@pytest.mark.parametrize("chunk_size", CHUNKINGS)
+def test_predict_matches_fit_labels(blobs, chunk_size):
+    """predict(x_train) reproduces the fit labels ≥ 99% — the out-of-sample
+    path (fitted degrees → V Σ⁻¹ projection → nearest centroid) agrees with
+    the in-sample pipeline, for both residencies."""
+    x, y = blobs
+    model = SCRBModel.fit(x, SCRBConfig(**BASE, chunk_size=chunk_size))
+    assert metrics.accuracy(model.fit_result.labels, y) > 0.95
+    pred = model.predict(x, batch_size=chunk_size)
+    assert metrics.accuracy(pred, model.fit_result.labels) >= 0.99
+    # transform: row-normalized (n, K) embedding
+    emb = model.transform(x[:64], batch_size=chunk_size)
+    assert emb.shape == (64, BASE["n_clusters"])
+    np.testing.assert_allclose(np.linalg.norm(emb, axis=1), 1.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("chunk_size", CHUNKINGS)
+def test_save_load_roundtrip_bit_identical(blobs, chunk_size, tmp_path):
+    x, _ = blobs
+    model = SCRBModel.fit(x, SCRBConfig(**BASE, chunk_size=chunk_size))
+    want = model.predict(x)
+    path = str(tmp_path / "model.npz")
+    model.save(path)
+    loaded = SCRBModel.load(path)
+    assert loaded.config == model.config
+    np.testing.assert_array_equal(loaded.predict(x), want)
+    np.testing.assert_array_equal(loaded.transform(x[:32]),
+                                  model.transform(x[:32]))
+
+
+@pytest.mark.parametrize("chunk_size", CHUNKINGS)
+def test_out_of_sample_holdout_matches_refit(blobs, chunk_size):
+    """Acceptance: fit on half, label the held-out half out-of-sample — ARI
+    within 0.05 of what a full refit assigns the same rows, under both
+    device and host_chunked residency."""
+    x, y = blobs
+    n_fit = x.shape[0] // 2
+    cfg = SCRBConfig(**BASE, chunk_size=chunk_size)
+    model = SCRBModel.fit(x[:n_fit], cfg)
+    pred = model.predict(x[n_fit:], batch_size=chunk_size)
+    full = sc_rb(jnp.asarray(x), SCRBConfig(**BASE))
+    ari_refit = metrics.adjusted_rand_index(full.labels[n_fit:], y[n_fit:])
+    ari_oos = metrics.adjusted_rand_index(pred, y[n_fit:])
+    assert ari_oos >= ari_refit - 0.05, (ari_oos, ari_refit)
+
+
+def test_model_state_independent_of_train_size(blobs):
+    """Acceptance: predict allocates no O(N_train) arrays — the fitted state
+    (feature params, degree dual, V, centroids) is byte-identical in size
+    across fit sizes, and serializes to the same footprint."""
+    x, _ = blobs
+    small = SCRBModel.fit(x[:400], SCRBConfig(**BASE))
+    large = SCRBModel.fit(x, SCRBConfig(**BASE))
+    assert small.nbytes == large.nbytes
+    shapes = lambda m: {
+        "dual": m.degree_dual.shape, "v": m.right_vectors.shape,
+        "sv": m.singular_values.shape, "cents": m.centroids.shape}
+    assert shapes(small) == shapes(large)
+    # the O(N) train-run result is deliberately NOT part of the artifact
+    assert large.fit_result is not None
+    assert large.predict(x[:16]).shape == (16,)
+
+
+def test_spectral_embed_model_has_no_centroids(blobs):
+    x, _ = blobs
+    model = SCRBModel.fit(x, SCRBConfig(**BASE), final_stage="normalize")
+    assert model.centroids is None
+    with pytest.raises(ValueError, match="no centroids"):
+        model.predict(x[:8])
+    emb = model.transform(x[:8])
+    assert emb.shape == (8, BASE["n_clusters"])
+
+
+def test_fit_accepts_explicit_plans(blobs):
+    """SCRBModel.fit under an explicit host_chunked plan matches the
+    config-derived plan (same executor path, same labels)."""
+    x, _ = blobs
+    cfg = SCRBConfig(**BASE, chunk_size=200)
+    plan = ExecutionPlan(residency="host_chunked", chunk_size=200)
+    via_plan = SCRBModel.fit(x, cfg, plan=plan)
+    via_cfg = SCRBModel.fit(x, cfg)
+    np.testing.assert_array_equal(via_plan.fit_result.labels,
+                                  via_cfg.fit_result.labels)
+    np.testing.assert_array_equal(via_plan.predict(x), via_cfg.predict(x))
+
+
+def test_dense_feature_map_model_roundtrip(blobs, tmp_path):
+    """The fitted-model API is registry-generic: a Nyström-map model (the
+    standard Nyström out-of-sample extension) predicts its own fit labels
+    and round-trips through save/load bit-identically."""
+    from repro.core import featuremap
+    x, y = blobs
+    cfg = SCRBConfig(n_clusters=4, n_grids=128, sigma=1.5,
+                     kmeans_replicates=2, seed=0)
+    fm = featuremap.make_feature_map("nystrom", rank=128, sigma=1.5)
+    model = SCRBModel.fit(x, cfg, plan=ExecutionPlan(feature_map=fm))
+    assert metrics.accuracy(model.fit_result.labels, y) > 0.9
+    pred = model.predict(x)
+    assert metrics.accuracy(pred, model.fit_result.labels) >= 0.99
+    path = str(tmp_path / "nys.npz")
+    model.save(path)
+    np.testing.assert_array_equal(SCRBModel.load(path).predict(x), pred)
