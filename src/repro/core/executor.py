@@ -62,10 +62,23 @@ class SCRBConfig:
     sigma: float = 1.0            # Laplacian kernel bandwidth
     d_g: Optional[int] = None     # hashed features per grid (power of 2);
                                   # None → auto-size from occupied-bin probe
-    solver: str = "lobpcg"        # lobpcg | lanczos | subspace
+    solver: str = "lobpcg"        # lobpcg | lobpcg_host | lanczos | subspace
+                                  # | randomized | auto (sketch, then a
+                                  # warm-started LOBPCG continuation only if
+                                  # the sketch misses solver_tol)
     solver_iters: int = 300
     solver_tol: float = 1e-4
     solver_buffer: int = 4
+    solver_precond: str = "degree"
+    # ^ "degree" applies the diagonal (Jacobi-on-L̂) preconditioner built
+    #   from the RB degrees inside the LOBPCG residual block (see
+    #   eigensolver.degree_precond); "none" disables. Ignored by the
+    #   lanczos/subspace study solvers.
+    solver_stable_tol: Optional[float] = None
+    # ^ adaptive stop: end the eigensolve once the leading-k Ritz subspace
+    #   moves by less than this between checkpoints (the embedding is
+    #   k-means-stable) instead of waiting for tiny residuals. None keeps
+    #   the pure residual stop; solver="auto" defaults it to 1e-3.
     kmeans_iters: int = 25
     kmeans_replicates: int = 10
     seed: int = 0
@@ -122,6 +135,11 @@ class ExecutionPlan:
     # stages, a different registered map.
     laplacian_normalize: bool = True     # D̂^{-1/2} degree normalization
     # (False → plain feature SVD, the SV_RF baseline variant)
+    eig_x0: Optional[Any] = None         # warm start for the eigensolve: a
+    # prior EigResult / (N, k) block / ChunkedDense from a related solve
+    # (previous R-sweep point, earlier fit on the same rows). Truncated or
+    # Gaussian-padded to the block width; a converged warm start exits the
+    # solver at iteration 0. See eigensolver.prepare_start_block.
 
     def __post_init__(self):
         if self.placement not in ("single", "mesh"):
@@ -148,10 +166,12 @@ _REPRESENTATIONS = {
 def plan_from_config(config: SCRBConfig, mesh=None) -> ExecutionPlan:
     """The config → plan mapping behind the three public entry points."""
     if config.chunk_size is not None and mesh is None \
-            and config.solver not in ("lobpcg", "lobpcg_host"):
+            and config.solver not in ("lobpcg", "lobpcg_host", "randomized",
+                                      "auto"):
         raise ValueError(
-            f"chunk_size streaming requires solver='lobpcg' (host-driven "
-            f"iteration), got {config.solver!r}")
+            f"chunk_size streaming requires a host-driven solver "
+            f"('lobpcg', 'lobpcg_host', 'randomized' or 'auto'), "
+            f"got {config.solver!r}")
     return ExecutionPlan(
         placement="mesh" if mesh is not None else "single",
         residency="host_chunked" if config.chunk_size is not None
@@ -209,7 +229,7 @@ def execute(
         with timer.stage("degrees"):
             z = rep_cls.from_features(feats, cfg, plan)
         with timer.stage("svd"):
-            eig = z.eigenpairs(k, fold_key(key, "eig"), cfg)
+            eig = z.eigenpairs(k, fold_key(key, "eig"), cfg, x0=plan.eig_x0)
         with timer.stage("normalize"):
             u_hat = z.map_row_chunks(row_normalize, eig.vectors)
         km, cluster_diag = None, {}
@@ -226,6 +246,9 @@ def execute(
                  "chunk_size": plan.chunk_size, "prefetch": plan.prefetch,
                  "impl": plan.impl},
         "feature_map": fitted.name,
+        "solver": cfg.solver,
+        "solver_precond": cfg.solver_precond,
+        "solver_warm_start": plan.eig_x0 is not None,
         "solver_iterations": int(eig.iterations),
         "solver_resnorms": np.asarray(eig.resnorms),
         "degrees_min": deg_min,

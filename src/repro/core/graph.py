@@ -92,8 +92,13 @@ class NormalizedAdjacency:
                             impl=self.impl)
 
     def gram_matvec(self, u: jax.Array) -> jax.Array:
-        """(Ẑ Ẑᵀ) u — the eigensolver operator. PSD, ‖Â‖ ≤ 1."""
-        return self.matmat(self.rmatmat(u))
+        """(Ẑ Ẑᵀ) u — the eigensolver operator. PSD, ‖Â‖ ≤ 1.
+
+        Routed through the fused single-launch Gram kernel when the (D, K)
+        intermediate fits VMEM (``ops.gram_matmul``); identical math to
+        ``matmat(rmatmat(u))`` either way."""
+        return ops.gram_matmul(self.idx, u, self.rowscale, self.d,
+                               d_g=self.d_g, impl=self.impl)
 
     def tree_flatten(self):
         return ((self.idx, self.rowscale, self.deg, self.counts),

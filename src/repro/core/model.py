@@ -93,15 +93,24 @@ class SCRBModel:
         plan: Optional[_executor.ExecutionPlan] = None,
         final_stage: str = "kmeans",
         keep_embedding: bool = True,
+        x0=None,
     ) -> "SCRBModel":
         """Run Algorithm 2 under any plan and keep the out-of-sample state.
 
         ``mesh`` / ``plan`` select placement and residency exactly as for
         ``executor.execute``; the train-run ``SCRBResult`` rides along as
         ``model.fit_result`` (so the one-shot wrappers stay thin).
+
+        ``x0`` warm-starts the eigensolve from a prior subspace — a previous
+        fit's ``eig`` state, an ``EigResult``, or an (N, k) block over the
+        same rows (e.g. the neighboring R-sweep point). Plumbed through
+        ``ExecutionPlan.eig_x0``; refitting with a converged subspace exits
+        the solver at iteration 0.
         """
         if plan is None:
             plan = _executor.plan_from_config(config, mesh=mesh)
+        if x0 is not None:
+            plan = dataclasses.replace(plan, eig_x0=x0)
         res = _executor.execute(x, config, plan, final_stage=final_stage,
                                 keep_embedding=keep_embedding,
                                 keep_state=True)

@@ -50,6 +50,20 @@ from repro.kernels import ops
 from repro.utils import prefetch_to_device
 
 
+def _solver_precond(cfg, deg) -> "Optional[np.ndarray]":
+    """The (N,) diagonal preconditioner a config selects — the degree-based
+    Jacobi diagonal for ``solver_precond="degree"`` (diag(ẐẐᵀ)_i = 1/deg_i
+    exactly under the RB self-collision identity), else None. The LOBPCG
+    family applies it to the residual block; lanczos/subspace ignore it."""
+    if cfg.solver_precond == "degree":
+        return eigensolver.degree_precond(np.asarray(deg))
+    if cfg.solver_precond in ("none", None):
+        return None
+    raise ValueError(
+        f"unknown solver_precond {cfg.solver_precond!r}; "
+        f"options ('degree', 'none')")
+
+
 @dataclasses.dataclass(frozen=True)
 class FittedFeatures:
     """Stage-1 output: a *fitted* feature map + the representation's feature
@@ -79,7 +93,8 @@ class RowMatrix(Protocol):
     def gram(self, u): ...            # (Ẑ Ẑᵀ) u : tall → tall
     def map_row_chunks(self, fn: Callable, *tall): ...
     def reduce(self, fn: Callable, init, *tall): ...
-    def eigenpairs(self, k: int, key: jax.Array, cfg) -> eigensolver.EigResult: ...
+    def eigenpairs(self, k: int, key: jax.Array, cfg,
+                   x0=None) -> eigensolver.EigResult: ...
     def cluster(self, key: jax.Array, u_hat, cfg) -> Tuple[Any, dict]: ...
 
 
@@ -159,11 +174,13 @@ class DeviceRows:
                                 impl=self.adj.impl)
         return np.asarray(counts).astype(np.float32)
 
-    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
+    def eigenpairs(self, k, key, cfg, x0=None) -> eigensolver.EigResult:
         eig = eigensolver.top_k_eigenpairs(
             self.adj.gram_matvec, self.n, k, key,
             solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-            buffer=cfg.solver_buffer)
+            buffer=cfg.solver_buffer, x0=x0,
+            precond=_solver_precond(cfg, self.deg),
+            stable_tol=cfg.solver_stable_tol)
         jax.block_until_ready(eig.vectors)
         return eig
 
@@ -280,12 +297,14 @@ class HostChunkedRows:
             acc = fn(acc, *cs)
         return acc
 
-    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
+    def eigenpairs(self, k, key, cfg, x0=None) -> eigensolver.EigResult:
         return eigensolver.top_k_eigenpairs(
             self.ell.gram_matvec_chunked, self.n, k, key,
             solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
             buffer=cfg.solver_buffer, streaming=True,
-            chunk_sizes=self.ell.chunk_sizes)
+            chunk_sizes=self.ell.chunk_sizes, x0=x0,
+            precond=_solver_precond(cfg, self.store.deg),
+            stable_tol=cfg.solver_stable_tol)
 
     def cluster(self, key, u_hat, cfg) -> Tuple[Any, dict]:
         kmeans_steps = max(cfg.kmeans_iters, u_hat.n_chunks)
@@ -475,28 +494,44 @@ class MeshRows:
                                     chunk_size=self.chunk_size)(ones)
         return np.asarray(counts)[:, 0].astype(np.float32)
 
-    def eigenpairs(self, k, key, cfg) -> eigensolver.EigResult:
-        if cfg.solver in ("lobpcg", "lobpcg_host"):
+    def eigenpairs(self, k, key, cfg, x0=None) -> eigensolver.EigResult:
+        precond = _solver_precond(cfg, self.deg)
+        if cfg.solver in ("lobpcg", "lobpcg_host") and 3 * k <= self.n:
             b = eigensolver.lobpcg_block_width(self.n, k, cfg.solver_buffer)
             with self.mesh:
                 matvec = self._gram_fn()
-                x0 = jax.device_put(
-                    jax.random.normal(key, (self.n, b), jnp.float32),
-                    self._row_sharding(self.mesh))
-                eig = jax.jit(functools.partial(
+                if x0 is not None:
+                    start = jnp.asarray(
+                        eigensolver.prepare_start_block(x0, self.n, b, key))
+                else:
+                    start = jax.random.normal(key, (self.n, b), jnp.float32)
+                x0s = jax.device_put(start, self._row_sharding(self.mesh))
+                solve = functools.partial(
                     eigensolver.lobpcg, matvec,
-                    max_iters=cfg.solver_iters, tol=cfg.solver_tol))(x0)
+                    max_iters=cfg.solver_iters, tol=cfg.solver_tol,
+                    stable_tol=cfg.solver_stable_tol, stable_k=k, conv_k=k)
+                if precond is None:
+                    eig = jax.jit(solve)(x0s)
+                else:
+                    # the (N,) diagonal rides the row sharding; passing it
+                    # as a traced arg keeps one jit cache entry per shape
+                    tvec = jax.device_put(jnp.asarray(precond, jnp.float32),
+                                          self._vec_sharding(self.mesh))
+                    eig = jax.jit(lambda xs, t: solve(xs, precond=t))(
+                        x0s, tvec)
                 u = jax.block_until_ready(eig.vectors[:, :k])
             return eigensolver.EigResult(eig.theta[:k], u, eig.resnorms[:k],
                                          eig.iterations)
-        # lanczos / subspace (the Fig. 3 solver-study baselines): driven
-        # eagerly against the shard_map'd Gram mat-vec — same collective
-        # schedule per mat-vec; only the small Krylov/Ritz algebra differs.
+        # lanczos / subspace (Fig. 3 study), randomized / auto (host-driven
+        # meta-policy) and the n < 3k dense fallback: driven eagerly against
+        # the shard_map'd Gram mat-vec — same collective schedule per
+        # mat-vec; only the small Krylov/Ritz algebra differs.
         with self.mesh:
             eig = eigensolver.top_k_eigenpairs(
                 self._gram_fn(), self.n, k, key, solver=cfg.solver,
                 max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-                buffer=cfg.solver_buffer)
+                buffer=cfg.solver_buffer, x0=x0, precond=precond,
+                stable_tol=cfg.solver_stable_tol)
             vectors = jax.block_until_ready(jax.device_put(
                 eig.vectors, self._row_sharding(self.mesh)))
         return eigensolver.EigResult(eig.theta, vectors, eig.resnorms,

@@ -96,6 +96,110 @@ def z_matmul_pallas(
     )(idx, v, rowscale[:, None].astype(v.dtype))
 
 
+def _gram_matmul_kernel(idx_ref, u_ref, s_ref, y_ref, q_ref, *, d_g, block_r):
+    """Fused Gram mat-vec y = Ẑ·(Ẑᵀu): the ELL index strip streams through
+    VMEM once per phase instead of once per kernel per product.
+
+    Grid is (2, N tiles, R strips), phase slowest / strip fastest. The
+    (D, K) intermediate q lives in the second output, whose index map is
+    constant — every grid step revisits the same block, so it stays
+    VMEM-resident for the whole kernel (consecutive-revisit accumulation)
+    and is written back once at the end. Phase 0 accumulates
+    q[strip] += onehotᵀ·(s∘u) over all row tiles (the scatter of
+    ``_zt_matmul_kernel``); phase 1 gathers y[tile] += s∘(onehot·q[strip])
+    (the gather of ``_z_matmul_kernel``). The y output's index map parks on
+    block 0 during phase 0 so no per-tile copy traffic happens before the
+    gather phase initializes it.
+    """
+    # program_id must be read at the top level of the kernel body: in
+    # interpret mode the evaluator only substitutes it outside cond branches.
+    ph, i, g = pl.program_id(0), pl.program_id(1), pl.program_id(2)
+    base = g * block_r * d_g
+    idx = idx_ref[...] - base                       # (bn, br), local to strip
+    scale = s_ref[...][:, 0]                        # (bn,)
+
+    @pl.when(ph == 0)
+    def _scatter():
+        us = u_ref[...] * scale[:, None].astype(u_ref.dtype)       # (bn, K)
+        for r in range(block_r):                    # static unroll
+            local = idx[:, r] - r * d_g             # [0, d_g)
+            onehot = jax.nn.one_hot(local, d_g, dtype=u_ref.dtype)  # (bn, d_g)
+            contrib = jax.lax.dot(
+                onehot.T, us, preferred_element_type=q_ref.dtype
+            )                                                       # (d_g, K)
+            row0 = base + r * d_g
+
+            @pl.when(i == 0)
+            def _init_strip():
+                q_ref[pl.dslice(row0, d_g), :] = contrib
+
+            @pl.when(i != 0)
+            def _acc_strip():
+                q_ref[pl.dslice(row0, d_g), :] += contrib
+
+    @pl.when(ph == 1)
+    def _gather():
+        acc = jnp.zeros_like(y_ref)
+        for r in range(block_r):
+            local = idx[:, r] - r * d_g
+            onehot = jax.nn.one_hot(local, d_g, dtype=u_ref.dtype)  # (bn, d_g)
+            strip = q_ref[pl.dslice(base + r * d_g, d_g), :]        # (d_g, K)
+            acc = acc + jax.lax.dot(
+                onehot, strip, preferred_element_type=y_ref.dtype)
+
+        @pl.when(g == 0)
+        def _init():
+            y_ref[...] = jnp.zeros_like(y_ref)
+
+        y_ref[...] += acc * scale[:, None].astype(y_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d", "d_g", "block_n", "block_r", "interpret")
+)
+def gram_matmul_pallas(
+    idx: jax.Array,       # (N, R) int32
+    u: jax.Array,         # (N, K) float
+    rowscale: jax.Array,  # (N,) float
+    d: int,
+    *,
+    d_g: int,
+    block_n: int = 128,
+    block_r: int = 4,
+    interpret: bool = True,
+) -> jax.Array:
+    """y = Ẑ Ẑᵀ u in one kernel launch; the (D, K) intermediate q = Ẑᵀu
+    never round-trips through HBM as a separate kernel boundary. Caller
+    (``ops.gram_matmul``) guards that (D, K) fits the VMEM budget and falls
+    back to the two-kernel pair otherwise."""
+    n, r = idx.shape
+    k = u.shape[1]
+    assert d == r * d_g and n % block_n == 0 and r % block_r == 0
+    grid = (2, n // block_n, r // block_r)   # phase slowest, strip fastest
+    kern = functools.partial(_gram_matmul_kernel, d_g=d_g, block_r=block_r)
+    y, _ = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, block_r), lambda p, i, g: (i, g)),
+            pl.BlockSpec((block_n, k), lambda p, i, g: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda p, i, g: (i, 0)),
+        ],
+        out_specs=[
+            # parked on block 0 through phase 0, per-tile during phase 1
+            pl.BlockSpec((block_n, k), lambda p, i, g: (p * i, 0)),
+            # constant index map: q stays VMEM-resident the whole kernel
+            pl.BlockSpec((d, k), lambda p, i, g: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, k), u.dtype),
+            jax.ShapeDtypeStruct((d, k), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx, u, rowscale[:, None].astype(u.dtype))
+    return y
+
+
 @functools.partial(
     jax.jit, static_argnames=("d", "d_g", "block_n", "block_r", "interpret")
 )

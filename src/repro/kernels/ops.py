@@ -311,6 +311,56 @@ def zt_matmul(
     )
 
 
+# Upper bound on the VMEM the fused Gram kernel's (D, K) resident
+# accumulator may claim; above this the dispatch falls back to the
+# two-kernel pair (the intermediate then lives in HBM, as before).
+GRAM_FUSE_VMEM_BYTES = 6 * 2 ** 20
+
+
+def gram_matmul(
+    idx: jax.Array,
+    u: jax.Array,
+    rowscale: jax.Array,
+    d: int,
+    *,
+    d_g: int,
+    impl: str = "auto",
+    block_rows: Optional[int] = None,
+) -> jax.Array:
+    """y = Ẑ Ẑᵀ u — the eigensolver's Gram mat-vec, fused when it fits.
+
+    On the Pallas route the ``Ẑᵀu`` / ``Ẑq`` pair runs as ONE kernel
+    (``ell_spmm.gram_matmul_pallas``): the ELL index strip is streamed
+    through VMEM once per phase and the (D, K) intermediate stays
+    VMEM-resident between the scatter and gather phases instead of
+    round-tripping through HBM. When ``D·K·4`` exceeds
+    ``GRAM_FUSE_VMEM_BYTES`` the dispatch silently composes the two
+    existing kernels — identical math, same tiling. The XLA route is the
+    reference composition of the two XLA paths.
+    """
+    impl = _resolve(impl)
+    r = idx.shape[1]
+    if impl == "xla":
+        rc = _largest_divisor(r, 8)
+        q = _zt_matmul_xla(idx, u, rowscale, d=d, r_chunk=rc)
+        return _z_matmul_xla(idx, q, rowscale, r_chunk=rc)
+    if d * u.shape[1] * 4 > GRAM_FUSE_VMEM_BYTES:
+        q = zt_matmul(idx, u, rowscale, d, d_g=d_g, impl="pallas",
+                      block_rows=block_rows)
+        return z_matmul(idx, q, rowscale, d_g=d_g, impl="pallas",
+                        block_rows=block_rows)
+    block_n = pick_block_rows("ell_spmm", idx.shape[0], block_rows)
+    idx_p, n = _pad_rows(idx, block_n)
+    u_p, _ = _pad_rows(u, block_n)
+    s_p, _ = _pad_rows(rowscale, block_n)   # pad scale with 0 ⇒ no contribution
+    out = ell_spmm.gram_matmul_pallas(
+        idx_p, u_p, s_p, d, d_g=d_g,
+        block_n=block_n, block_r=_largest_divisor(r, 4),
+        interpret=not _on_tpu(),
+    )
+    return out[:n]
+
+
 # --------------------------------------------------------------------------
 # k-means assignment
 # --------------------------------------------------------------------------

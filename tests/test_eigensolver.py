@@ -95,3 +95,229 @@ def test_lobpcg_beats_subspace_iteration_on_matvecs():
     lo = eigensolver.lobpcg(lambda u: a @ u, x0, max_iters=500, tol=1e-5)
     su = eigensolver.subspace_iteration(lambda u: a @ u, x0, max_iters=500, tol=1e-5)
     assert int(lo.iterations) < int(su.iterations)
+
+
+# --------------------------------------------------------------------------
+# Edge-case coverage added with the preconditioned/warm-started rebuild.
+# --------------------------------------------------------------------------
+
+def test_block_width_clamped_for_small_n():
+    """lobpcg_block_width must keep 3b <= n (regression: n=10, k=4 used to
+    return b=8 and crash lobpcg with 'block too large')."""
+    assert eigensolver.lobpcg_block_width(10, 4, 4) == 3
+    assert eigensolver.lobpcg_block_width(2, 1, 4) == 1     # floor at 1
+    for n, k, buf in [(10, 4, 4), (60, 4, 4), (9, 3, 0), (1000, 8, 4)]:
+        b = eigensolver.lobpcg_block_width(n, k, buf)
+        assert 1 <= b and (3 * b <= n or n < 3)
+
+
+def test_dense_fallback_when_n_below_3k():
+    """n < 3k degrades to the exact dense eigensolve instead of raising."""
+    n, k = 10, 4
+    a, lam = _random_psd(jax.random.PRNGKey(8), n, decay=0.7)
+    res = eigensolver.top_k_eigenpairs(
+        lambda u: a @ u, n, k, jax.random.PRNGKey(0), solver="lobpcg")
+    np.testing.assert_allclose(np.asarray(res.theta), lam[:k],
+                               rtol=1e-5, atol=1e-6)
+    assert int(res.iterations) == 1
+    assert res.vectors.shape == (n, k)
+
+
+def test_dense_fallback_chunked():
+    """The n < 3k fallback also runs on the streaming (ChunkedDense) route."""
+    from repro.core.streaming import ChunkedDense
+    n, k = 11, 4
+    a, lam = _random_psd(jax.random.PRNGKey(9), n, decay=0.7)
+    an = np.asarray(a)
+    sizes = (4, 4, 3)
+    mv = lambda u: ChunkedDense.from_array(an @ u.to_array(), sizes)
+    res = eigensolver.top_k_eigenpairs(
+        mv, n, k, jax.random.PRNGKey(0), solver="lobpcg",
+        streaming=True, chunk_sizes=sizes)
+    np.testing.assert_allclose(np.asarray(res.theta), lam[:k],
+                               rtol=1e-5, atol=1e-6)
+    assert isinstance(res.vectors, ChunkedDense)
+
+
+@pytest.mark.parametrize("driver", ["lobpcg", "lobpcg_host"])
+def test_converged_x0_exits_at_zero_iterations(driver):
+    """A converged start block must exit before the first update."""
+    n, k = 60, 4
+    a, _ = _random_psd(jax.random.PRNGKey(10), n, decay=0.8)
+    evals, evecs = np.linalg.eigh(np.asarray(a, np.float64))
+    x0 = jnp.asarray(evecs[:, ::-1][:, :k], jnp.float32)
+    res = getattr(eigensolver, driver)(
+        lambda u: a @ u, x0, max_iters=100, tol=1e-4)
+    assert int(res.iterations) == 0
+
+
+def test_warm_start_same_pairs_fewer_iterations():
+    """Warm-starting from a prior solve reproduces the eigenpairs in
+    strictly fewer iterations than the cold random start."""
+    n, k = 150, 5
+    a, lam = _random_psd(jax.random.PRNGKey(12), n, decay=0.9)
+    mv = lambda u: a @ u
+    cold = eigensolver.top_k_eigenpairs(
+        mv, n, k, jax.random.PRNGKey(1), solver="lobpcg", tol=1e-5,
+        max_iters=500)
+    warm = eigensolver.top_k_eigenpairs(
+        mv, n, k, jax.random.PRNGKey(2), solver="lobpcg", tol=1e-5,
+        max_iters=500, x0=cold)
+    assert int(cold.iterations) < 500                # cold run must converge
+    np.testing.assert_allclose(np.asarray(warm.theta),
+                               np.asarray(cold.theta), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(warm.theta), lam[:k],
+                               rtol=1e-4, atol=1e-5)
+    assert int(warm.iterations) < int(cold.iterations)
+
+
+def test_prepare_start_block_shapes():
+    key = jax.random.PRNGKey(0)
+    x = np.ones((20, 3), np.float32)
+    assert eigensolver.prepare_start_block(x, 20, 2, key).shape == (20, 2)
+    padded = eigensolver.prepare_start_block(x, 20, 6, key)
+    assert padded.shape == (20, 6)
+    np.testing.assert_array_equal(padded[:, :3], x)
+    with pytest.raises(ValueError):
+        eigensolver.prepare_start_block(x, 21, 3, key)
+
+
+def test_rr_update_rank_deficient_keeps_orthonormality():
+    """Regression: the QR refresh is all-or-nothing. A rank-deficient
+    [X|W|P] update (W duplicating X's span) used to mix QR columns with raw
+    RR columns and silently break XᵀX = I."""
+    n, k = 40, 4
+    a, _ = _random_psd(jax.random.PRNGKey(13), n, decay=0.8)
+    x = np.linalg.qr(np.random.default_rng(0).normal(size=(n, k)))[0]
+    x = jnp.asarray(x, jnp.float32)
+    ax = a @ x
+    w = x                                # fully dependent search block
+    aw = ax
+    p = jnp.zeros_like(x)                # first-iteration shape: P = 0
+    x_new, ax_new, _, _ = eigensolver._lobpcg_rr_update(
+        x, ax, p, jnp.zeros_like(x), w, aw, k)
+    gram = np.asarray(x_new.T @ x_new)
+    np.testing.assert_allclose(gram, np.eye(k), atol=5e-3)
+    # AX must track X through the refresh (consistency of the pair)
+    np.testing.assert_allclose(np.asarray(a @ x_new), np.asarray(ax_new),
+                               atol=5e-3)
+
+
+def test_lanczos_reports_true_basis_size_and_honors_tol():
+    """lanczos must not claim iterations = max_iters: the basis exhausts on
+    a low-rank operator, and tol stops it early on a full-rank one."""
+    n, k = 80, 3
+    rng = np.random.default_rng(3)
+    b = rng.normal(size=(n, 5)).astype(np.float32)
+    low_rank = jnp.asarray(b @ b.T / n)              # rank 5
+    res = eigensolver.lanczos(
+        lambda u: low_rank @ u,
+        jax.random.normal(jax.random.PRNGKey(0), (n, 1)), k, max_iters=60)
+    assert int(res.iterations) <= 8                  # ~rank, never 60
+    a, lam = _random_psd(jax.random.PRNGKey(14), n, decay=0.5)
+    tight = eigensolver.lanczos(
+        lambda u: a @ u,
+        jax.random.normal(jax.random.PRNGKey(1), (n, 1)), k,
+        max_iters=70, tol=1e-6)
+    assert int(tight.iterations) < 70                # tol-based early exit
+    np.testing.assert_allclose(np.asarray(tight.theta), lam[:k],
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("driver", ["lobpcg", "lobpcg_host"])
+def test_precond_converges_to_same_pairs(driver):
+    """A positive diagonal preconditioner changes the search directions but
+    not the fixed point; convergence must not degrade."""
+    n, k = 100, 4
+    a, lam = _random_psd(jax.random.PRNGKey(15), n, decay=0.9)
+    tvec = jnp.asarray(
+        np.random.default_rng(1).uniform(0.5, 1.0, n).astype(np.float32))
+    x0 = jax.random.normal(jax.random.PRNGKey(2), (n, k))
+    res = getattr(eigensolver, driver)(
+        lambda u: a @ u, x0, max_iters=400, tol=1e-6, precond=tvec)
+    np.testing.assert_allclose(np.asarray(res.theta), lam[:k],
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_degree_precond_properties():
+    deg = np.array([1.0, 1.5, 4.0, 100.0, 2.0], np.float32)
+    t = eigensolver.degree_precond(deg)
+    assert t.shape == deg.shape and t.dtype == np.float32
+    assert np.all(t > 0) and np.isclose(t.max(), 1.0)
+
+
+@pytest.mark.parametrize("driver", ["lobpcg", "lobpcg_host"])
+def test_adaptive_stability_stop(driver):
+    """stable_tol must stop the solve once the leading subspace settles —
+    fewer iterations than the tiny-residual stop, same leading subspace."""
+    n, k = 120, 4
+    a, _ = _random_psd(jax.random.PRNGKey(16), n, decay=0.97)
+    x0 = jax.random.normal(jax.random.PRNGKey(3), (n, k + 2))
+    mv = lambda u: a @ u
+    full = getattr(eigensolver, driver)(mv, x0, max_iters=500, tol=1e-8)
+    adap = getattr(eigensolver, driver)(
+        mv, x0, max_iters=500, tol=1e-8, stable_tol=1e-4, stable_k=k)
+    assert int(adap.iterations) < int(full.iterations)
+    align = eigensolver._subspace_alignment(
+        jnp.asarray(full.vectors), jnp.asarray(adap.vectors), k)
+    assert float(align) > 0.999
+
+
+def test_randomized_matches_dense_on_fast_decay():
+    """The one-pass block-Krylov sketch nails a fast-decaying spectrum."""
+    n, k = 120, 4
+    a, lam = _random_psd(jax.random.PRNGKey(17), n, decay=0.5)
+    res = eigensolver.top_k_eigenpairs(
+        lambda u: a @ u, n, k, jax.random.PRNGKey(4), solver="randomized")
+    np.testing.assert_allclose(np.asarray(res.theta), lam[:k],
+                               rtol=1e-3, atol=1e-4)
+    assert int(res.iterations) == 3                  # depth + 1 block passes
+
+
+@pytest.mark.parametrize("decay", [0.5, 0.97])
+def test_auto_solver_correct_on_both_regimes(decay):
+    """auto = sketch, plus an LOBPCG continuation only when the sketch
+    misses tol; both regimes must land on the dense oracle's pairs."""
+    n, k = 120, 4
+    a, lam = _random_psd(jax.random.PRNGKey(18), n, decay=decay)
+    res = eigensolver.top_k_eigenpairs(
+        lambda u: a @ u, n, k, jax.random.PRNGKey(5), solver="auto",
+        tol=1e-4, max_iters=400)
+    np.testing.assert_allclose(np.asarray(res.theta), lam[:k],
+                               rtol=1e-3, atol=1e-3)
+    assert int(res.iterations) >= 3
+
+
+def test_chunked_auto_matches_device_auto():
+    """solver='auto' over ChunkedDense chunks matches the dense-route auto
+    solve on the same operator (same oracle, chunked algebra)."""
+    from repro.core.streaming import ChunkedDense
+    n, k = 90, 3
+    a, lam = _random_psd(jax.random.PRNGKey(19), n, decay=0.8)
+    an = np.asarray(a)
+    sizes = (32, 32, 26)
+    mv = lambda u: ChunkedDense.from_array(an @ u.to_array(), sizes)
+    res = eigensolver.top_k_eigenpairs(
+        mv, n, k, jax.random.PRNGKey(6), solver="auto", tol=1e-5,
+        max_iters=300, streaming=True, chunk_sizes=sizes)
+    np.testing.assert_allclose(np.asarray(res.theta), lam[:k],
+                               rtol=1e-3, atol=1e-4)
+    assert isinstance(res.vectors, ChunkedDense)
+
+
+def test_degenerate_spectrum_exact_multiplicity():
+    """Exactly repeated top eigenvalue (multiplicity 3): the solver must
+    return the 3-dimensional invariant subspace, not oscillate."""
+    n = 90
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(20), (n, n)))
+    lam = jnp.concatenate([jnp.full((3,), 1.0), 0.6 * 0.9 ** jnp.arange(n - 3)])
+    a = (q * lam[None, :]) @ q.T
+    res = eigensolver.top_k_eigenpairs(
+        lambda u: a @ u, n, 3, jax.random.PRNGKey(7), solver="lobpcg",
+        tol=1e-6, max_iters=500)
+    np.testing.assert_allclose(np.asarray(res.theta), [1.0, 1.0, 1.0],
+                               atol=1e-4)
+    # returned block spans the top invariant subspace
+    proj = np.asarray(q[:, :3]).T @ np.asarray(res.vectors)
+    s = np.linalg.svd(proj, compute_uv=False)
+    assert s.min() > 0.999

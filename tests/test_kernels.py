@@ -273,3 +273,41 @@ def test_bin_counts_pallas_is_eager_only():
         jax.jit(lambda i: ops.bin_counts(i, d=64, d_g=16, impl="pallas"))(idx)
     out = jax.jit(lambda i: ops.bin_counts(i, d=64, d_g=16, impl="xla"))(idx)
     assert int(out[0]) == 64
+
+
+def _gram_inputs(n, r, d_g, k, seed=0):
+    d = r * d_g
+    key = jax.random.PRNGKey(seed)
+    idx = (
+        jax.random.randint(key, (n, r), 0, d_g)
+        + jnp.arange(r, dtype=jnp.int32)[None, :] * d_g)
+    u = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, k), jnp.float32)
+    s = jax.random.uniform(jax.random.PRNGKey(seed + 2), (n,), jnp.float32) + 0.5
+    return idx, u, s, d
+
+
+@pytest.mark.parametrize("n,r,d_g,k", [
+    (64, 4, 64, 8),
+    (100, 8, 128, 3),      # ragged n -> padded tiles
+    pytest.param(300, 12, 64, 5, marks=pytest.mark.slow),  # r % 4 != 0
+])
+@pytest.mark.parametrize("impl", ["xla", "pallas", "auto"])
+def test_gram_matmul_matches_ref(n, r, d_g, k, impl):
+    """The fused Ẑ(Ẑᵀu) Gram mat-vec agrees with the composed oracles on
+    every dispatch route (xla composition, fused Pallas, auto)."""
+    idx, u, s, d = _gram_inputs(n, r, d_g, k, seed=n + r + k)
+    want = ref.z_matmul_ref(idx, ref.zt_matmul_ref(idx, u, s, d), s)
+    got = ops.gram_matmul(idx, u, s, d, d_g=d_g, impl=impl)
+    assert got.shape == (n, k)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5 * r)
+
+
+def test_gram_matmul_vmem_fallback(monkeypatch):
+    """When D·K·4 blows the VMEM budget the Pallas route must silently
+    compose the two single-pass kernels — identical math."""
+    idx, u, s, d = _gram_inputs(64, 4, 64, 8, seed=7)
+    want = np.asarray(ops.gram_matmul(idx, u, s, d, d_g=64, impl="xla"))
+    monkeypatch.setattr(ops, "GRAM_FUSE_VMEM_BYTES", 16)
+    got = np.asarray(ops.gram_matmul(idx, u, s, d, d_g=64, impl="pallas"))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
