@@ -20,7 +20,6 @@ def run(multi_pod: bool, compress: bool, out_dir: str,
     # n=25M keeps the CPU-backend compile artifact-free (XLA CPU unrolls the
     # r-chunk loop, transiently materializing all gathers); per-chip ratios
     # are representative and every term scales linearly in N.
-    import jax
     from repro.core.distributed import lower_clustering_cell
     from repro.launch.dryrun import parse_collectives
     from repro.launch.mesh import make_production_mesh

@@ -5,12 +5,11 @@ CPU-friendly scale and expose ``--scale`` to grow toward the paper's N.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
-import numpy as np
 
 from repro.core.rb import suggest_sigma
-from repro.data.synthetic import PAPER_TABLE1, SuiteSpec, generate
+from repro.data.synthetic import PAPER_TABLE1, generate
 
 # Kernel bandwidth per dataset via the paper's protocol (§5 "Parameter
 # selection"): cross-validate σ within [0.01, 100] on a labeled subsample,

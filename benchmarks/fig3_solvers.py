@@ -1,9 +1,10 @@
 """Paper Fig. 3, extended into a solver bake-off on the covtype-shaped
 dataset (clustered spectrum): the full ``SOLVERS`` registry — LOBPCG
 (PRIMME-analogue, degree-preconditioned), its host-driven twin, Lanczos
-('svds'), subspace iteration, the randomized block-Krylov one-pass sketch —
-plus the ``auto`` meta-policy, measured on accuracy + svd runtime +
-iteration count while varying R.
+('svds'), subspace iteration, the randomized block-Krylov one-pass sketch,
+the eigendecomposition-free compressive cell (Chebyshev-filtered random
+signals, no (N, K) iterate) — plus the ``auto`` meta-policy, measured on
+accuracy + svd runtime + iteration count while varying R.
 
 The bake-off emits a per-R ``recommendation``: the fastest solver whose
 accuracy lands within ``acc_margin`` of the best at that R. This is the
@@ -23,7 +24,7 @@ from benchmarks.datasets import one
 from repro.core import SCRBConfig, metrics as M, sc_rb
 
 BAKEOFF_SOLVERS = ["lobpcg", "lobpcg_host", "lanczos", "subspace",
-                   "randomized", "auto"]
+                   "randomized", "compressive", "auto"]
 
 
 def recommend(per_solver: dict, rs, acc_margin: float = 0.01) -> list[str]:

@@ -7,7 +7,13 @@ log-log space (slope ≈ 1 ⇒ linear; the paper contrasts against quadratic SC)
 ``--solver`` selects the eigensolver (default ``auto``: the randomized
 block-Krylov sketch with a warm-started preconditioned LOBPCG continuation
 only when the sketch misses tolerance — the bake-off winner from fig3);
-``--solver lobpcg`` reproduces the pre-bake-off configuration. The sweep
+``--solver lobpcg`` reproduces the pre-bake-off configuration, and
+``--solver compressive`` runs the eigendecomposition-free cell whose svd
+stage is a fixed Chebyshev mat-vec budget independent of N (the ``auto``
+policy itself routes there above ``compressive_auto_n`` samples); each sweep
+point hands its (λ_K, λ_{K+1}) estimate to the next via
+``compressive_lambdas``, so every point after the first skips the
+eigencount sweep and pays the filter alone. The sweep
 records per-N solver iteration counts alongside the stage times so the svd
 stage's cost decomposes into iterations × per-iteration mat-vec cost.
 """
@@ -31,9 +37,12 @@ def run(ns=(1_000, 2_000, 4_000, 8_000, 16_000), rank: int = 256,
     for st in stages:
         out["stages"][st] = []
 
+    lambdas = None   # compressive λ warm start, carried along the sweep
+
     def make_cfg(k, sigma):
         return SCRBConfig(n_clusters=k, n_grids=rank, sigma=sigma,
-                          solver=solver, kmeans_replicates=4, seed=seed)
+                          solver=solver, kmeans_replicates=4, seed=seed,
+                          compressive_lambdas=lambdas)
 
     # jit warm-up at the smallest N so the sweep measures compute, not traces
     spec0, x0, _, sig0 = one("poker", scale=ns[0] / 1_025_010, seed=seed)
@@ -42,6 +51,12 @@ def run(ns=(1_000, 2_000, 4_000, 8_000, 16_000), rank: int = 256,
         spec, x, y, sigma = one("poker", scale=n / 1_025_010, seed=seed)
         x = x[:n]
         res = sc_rb(jnp.asarray(x), make_cfg(spec.k, sigma))
+        if "compressive" in res.diagnostics:
+            # the spectrum of Â is N-stable on a fixed distribution, so each
+            # point hands its (λ_K, λ_{K+1}) bracket to the next — after the
+            # first point the svd stage is the filter's fixed budget alone
+            cd = res.diagnostics["compressive"]
+            lambdas = (cd["lambda_k"], cd["lambda_k1"])
         for st in stages:
             out["stages"][st].append(res.timer.times.get(st, 0.0))
         out["total_s"].append(res.timer.total)

@@ -20,8 +20,12 @@ non-zero if the runtime slope exceeds ``--max-slope`` or if either residency
 series grows with N on the chunked path. ``--mesh-gate`` additionally runs
 one mesh plan on forced CPU devices (subprocess — the XLA device-count flag
 must precede jax init) and asserts the distributed k-means stage's peak
-device residency is O(shard_chunk), not O(N/shards). The JSON written to
-``--out`` is uploaded as the ``BENCH_PR.json`` artifact.
+device residency is O(shard_chunk), not O(N/shards). ``--compressive-gate``
+runs the eigendecomposition-free ``solver="compressive"`` cell on the same
+chunked plan and fails if its labels drift from a single-shot LOBPCG run
+(ARI < 0.90) or if its peak embedding residency exceeds the O(chunk·d)
+budget — i.e. if a dense (N, K) iterate creeps back into the fit path. The
+JSON written to ``--out`` is uploaded as the ``BENCH_PR.json`` artifact.
 """
 from __future__ import annotations
 
@@ -172,6 +176,111 @@ def run(ns=(1_000, 2_000, 4_000, 8_000, 16_000), chunk_size: int = 1_024,
               f"{sweep['on']['total_s']:.2f}s / {sweep['off']['total_s']:.2f}s "
               f"({speedup:.2f}x)")
     return out
+
+
+def run_compressive(ns=(1_000, 2_000, 4_000, 8_000), chunk_size: int = 512,
+                    rank: int = 64, seed: int = 0,
+                    degree: int = 48) -> dict:
+    """Compressive cell for the bench-smoke gate: the eigendecomposition-free
+    solver on the chunked plan must reproduce the single-shot LOBPCG labels
+    (ARI ≥ 0.90) while its peak device embedding residency stays at
+    O(chunk·d) — flat in N, no (N, K) iterate anywhere in the fit path.
+
+    ``degree`` pins the Chebyshev filter degree: the gap-adaptive default
+    can pick up to 96 mat-vec passes, which is correctness-irrelevant for
+    this gate (label parity is degree-robust on a gapped spectrum) but
+    would double the CI cost of the cell. Each sweep point hands its
+    (λ_K, λ_{K+1}) estimate to the next (``compressive_lambdas``), so only
+    the first point pays the eigencount sweep — the same chaining fig4
+    uses. The sweep also records the svd stage so BENCH_PR.json carries
+    the fixed-mat-vec-budget timing next to the main sweep's ``auto``
+    numbers.
+    """
+    out = {"ns": list(ns), "chunk_size": chunk_size, "rank": rank,
+           "solver": "compressive", "degree": degree}
+    base = dict(n_clusters=2, n_grids=rank, sigma=0.15,
+                kmeans_replicates=4, seed=seed)
+    lambdas = None
+
+    def ccfg():
+        return SCRBConfig(**base, solver="compressive", chunk_size=chunk_size,
+                          compressive_degree=degree,
+                          compressive_lambdas=lambdas)
+
+    # reference: single-shot (device-resident) LOBPCG at the smallest N
+    x0, y0 = make_rings(ns[0], 2, seed=seed)
+    ref = sc_rb(jnp.asarray(x0), SCRBConfig(
+        **base, solver="lobpcg", solver_iters=300, solver_tol=1e-4))
+    res0 = sc_rb(x0, ccfg())
+    cd0 = res0.diagnostics["compressive"]
+    lambdas = (cd0["lambda_k"], cd0["lambda_k1"])
+    out["lambda_estimate_at_n0"] = {k: cd0[k] for k in
+                                    ("lambda_k", "lambda_k1", "cutoff")}
+    out["ari_vs_lobpcg_at_n0"] = metrics.adjusted_rand_index(
+        res0.labels, ref.labels)
+    out["ari_truth_lobpcg"] = metrics.adjusted_rand_index(ref.labels, y0)
+    out["ari_truth_compressive"] = metrics.adjusted_rand_index(res0.labels, y0)
+    print(f"[fig6] compressive parity at N={ns[0]}: ARI vs LOBPCG "
+          f"{out['ari_vs_lobpcg_at_n0']:.3f} (truth: lobpcg "
+          f"{out['ari_truth_lobpcg']:.3f}, compressive "
+          f"{out['ari_truth_compressive']:.3f})")
+
+    out["embedding_bytes_streaming"] = []
+    out["svd_s"] = []
+    out["total_s"] = []
+    out["signals"] = []
+    out["solver_iterations"] = []
+    for n in ns:
+        x, _ = make_rings(n, 2, seed=seed)
+        res = sc_rb(x, ccfg())
+        d = res.diagnostics
+        cd = d["compressive"]
+        lambdas = (cd["lambda_k"], cd["lambda_k1"])
+        out["embedding_bytes_streaming"].append(
+            d["embedding_device_bytes_peak"])
+        out["svd_s"].append(res.timer.times.get("svd", 0.0))
+        out["total_s"].append(res.timer.total)
+        out["signals"].append(d["compressive"]["signals"])
+        out["solver_iterations"].append(d["solver_iterations"])
+        print(f"[fig6] compressive N={n:7d} total={res.timer.total:6.2f}s "
+              f"svd={out['svd_s'][-1]:6.2f}s "
+              f"passes={d['solver_iterations']} "
+              f"emb_peak={d['embedding_device_bytes_peak']/2**10:.1f}KiB")
+    return out
+
+
+def gate_compressive(cout: dict) -> list[str]:
+    """CI conditions for the compressive cell: label parity with the
+    single-shot LOBPCG reference, and O(chunk) peak embedding residency —
+    any (N, K)-shaped device iterate in the fit path shows up here as a
+    residency figure that scales with N instead of chunk_size."""
+    failures = []
+    if cout["ari_vs_lobpcg_at_n0"] < 0.90:
+        failures.append(
+            f"compressive vs single-shot LOBPCG label ARI "
+            f"{cout['ari_vs_lobpcg_at_n0']:.3f} < 0.90 — the "
+            f"eigendecomposition-free cell no longer reproduces the "
+            f"eigensolver's partition")
+    saturated = [i for i, n in enumerate(cout["ns"])
+                 if n >= cout["chunk_size"]]
+    vals = [cout["embedding_bytes_streaming"][i] for i in saturated]
+    if len(vals) >= 2 and any(b > vals[0] for b in vals[1:]):
+        failures.append(
+            f"compressive embedding residency grows with N ({vals} at "
+            f"ns ≥ chunk_size) — an O(N) device allocation crept into the "
+            f"compressive fit path")
+    for i in saturated:
+        n = cout["ns"][i]
+        budget = cout["chunk_size"] * 4 * cout["signals"][i]
+        got = cout["embedding_bytes_streaming"][i]
+        if got > budget:
+            failures.append(
+                f"compressive embedding residency {got}B at N={n} exceeds "
+                f"the O(chunk·d) budget {budget}B "
+                f"(chunk={cout['chunk_size']}, d={cout['signals'][i]}) — "
+                f"the fit path is holding more than one filtered chunk "
+                f"on device")
+    return failures
 
 
 _MESH_CHILD = r"""
@@ -331,6 +440,13 @@ def main() -> None:
     ap.add_argument("--mesh-devices", type=int, default=2)
     ap.add_argument("--mesh-n", type=int, default=4_096)
     ap.add_argument("--mesh-chunk", type=int, default=512)
+    ap.add_argument("--compressive-gate", action="store_true",
+                    help="also run the eigendecomposition-free compressive "
+                         "cell on the chunked plan and gate its LOBPCG "
+                         "label parity + O(chunk) embedding residency")
+    ap.add_argument("--compressive-degree", type=int, default=48,
+                    help="pinned Chebyshev filter degree for the gate cell "
+                         "(bounds the mat-vec budget in CI)")
     args = ap.parse_args()
     ns = [n for n in (1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000)
           if n <= args.max_n]
@@ -339,6 +455,11 @@ def main() -> None:
     if os.path.dirname(args.out):
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
     failures = gate(res, max_slope=args.max_slope)
+    if args.compressive_gate:
+        res["compressive"] = run_compressive(
+            ns=tuple(ns), chunk_size=args.chunk_size, rank=args.rank,
+            degree=args.compressive_degree)
+        failures += gate_compressive(res["compressive"])
     if args.mesh_gate:
         res["mesh"] = run_mesh(n=args.mesh_n, chunk=args.mesh_chunk,
                                rank=args.rank, devices=args.mesh_devices)

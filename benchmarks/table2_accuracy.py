@@ -7,7 +7,6 @@ import json
 from typing import Dict, List
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.datasets import suite
 from repro.core import metrics as M
@@ -26,10 +25,10 @@ def check_registry_coverage() -> None:
     if missing:
         raise AssertionError(
             f"METHODS / METHOD_FEATURE_MAPS disagree on {sorted(missing)}")
-    if len(METHODS) != 9:
+    if len(METHODS) != 10:
         raise AssertionError(
-            f"expected the paper's 9 methods (8 baselines + sc_rb), "
-            f"got {sorted(METHODS)}")
+            f"expected the paper's 9 methods (8 baselines + sc_rb) plus "
+            f"the compressive variant csc_rb, got {sorted(METHODS)}")
     unbacked = {name: fm for name, fm in METHOD_FEATURE_MAPS.items()
                 if fm is not None and fm not in FEATURE_MAPS}
     if unbacked:

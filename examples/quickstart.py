@@ -42,7 +42,7 @@ def main() -> None:
               f"{res.diagnostics['ell_device_bytes_peak']/2**20:.1f} MiB on "
               f"device (single-shot would need {args.n*args.grids*4/2**20:.1f})")
     m = metrics.all_metrics(res.labels, y)
-    print(f"SC_RB   : " + "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
+    print("SC_RB   : " + "  ".join(f"{k}={v:.3f}" for k, v in m.items()))
     print(f"  stages: {res.timer}")
     print(f"  diagnostics: D={res.diagnostics['n_features_D']}, "
           f"nnz={res.diagnostics['nnz']}, "
@@ -50,7 +50,7 @@ def main() -> None:
 
     km = METHODS["kmeans"](xj, BaselineConfig(n_clusters=2, kmeans_replicates=4))
     mk = metrics.all_metrics(km.labels, y)
-    print(f"k-means : " + "  ".join(f"{k}={v:.3f}" for k, v in mk.items())
+    print("k-means : " + "  ".join(f"{k}={v:.3f}" for k, v in mk.items())
           + "   <- fails on non-convex clusters, as in the paper's motivation")
 
 

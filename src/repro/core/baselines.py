@@ -143,6 +143,16 @@ def sc_exact(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
     return BaselineResult(labels, timer)
 
 
+def csc_rb_baseline(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
+    """Compressive SC_RB: the eigendecomposition-free plan cell (Tremblay
+    et al.'s compressive SC over the same RB graph — Chebyshev-filtered
+    random signals + random-subset k-means, ``repro.core.compressive``).
+    Same executor, same keys; only ``solver`` differs from ``sc_rb``."""
+    scfg = dataclasses.replace(_scrb_config(cfg), solver="compressive")
+    res = executor.execute(x, scfg)
+    return BaselineResult(res.labels, res.timer)
+
+
 def sc_rb_baseline(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
     """This paper, under the shared baseline protocol (the default RB plan).
 
@@ -165,6 +175,7 @@ METHODS: Dict[str, Callable[[jax.Array, BaselineConfig], BaselineResult]] = {
     "sc_nys": _spectral_via_registry("nystrom", laplacian=True),
     "sc_rf": _spectral_via_registry("rff", laplacian=True),
     "sc_rb": sc_rb_baseline,
+    "csc_rb": csc_rb_baseline,
 }
 
 # which registry entry backs each method (None: not a feature-map method) —
@@ -180,4 +191,5 @@ METHOD_FEATURE_MAPS: Dict[str, Optional[str]] = {
     "sc_nys": "nystrom",
     "sc_rf": "rff",
     "sc_rb": "rb",
+    "csc_rb": "rb",
 }

@@ -851,6 +851,13 @@ def top_k_eigenpairs(
     per-chunk (never an O(N) device array), and the returned ``vectors``
     are a host-chunked ``ChunkedDense``.
     """
+    if solver == "compressive":
+        raise ValueError(
+            "solver='compressive' is not an iterative eigensolver — the "
+            "executor routes it to repro.core.compressive before the "
+            "eigensolve stage (Chebyshev-filtered random signals instead "
+            "of eigenpairs); run it via executor.execute / SCRBModel.fit "
+            "with SCRBConfig(solver='compressive')")
     valid = set(SOLVERS) | {AUTO_SOLVER}
     if solver not in valid:
         raise ValueError(f"unknown solver {solver!r}; options {sorted(valid)}")

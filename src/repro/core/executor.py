@@ -44,12 +44,12 @@ k-means statistics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Optional
+from typing import Any, Mapping, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.core import featuremap, rowmatrix, streaming
+from repro.core import compressive, featuremap, rowmatrix, streaming
 from repro.core.kmeans import row_normalize
 from repro.kernels import ops
 from repro.utils import StageTimer, fold_key
@@ -66,6 +66,11 @@ class SCRBConfig:
                                   # | randomized | auto (sketch, then a
                                   # warm-started LOBPCG continuation only if
                                   # the sketch misses solver_tol)
+                                  # | compressive (eigendecomposition-free
+                                  # Chebyshev filtering, repro.core.
+                                  # compressive — no (N, K) iterate; "auto"
+                                  # also routes here above compressive_auto_n
+                                  # rows)
     solver_iters: int = 300
     solver_tol: float = 1e-4
     solver_buffer: int = 4
@@ -79,6 +84,25 @@ class SCRBConfig:
     #   moves by less than this between checkpoints (the embedding is
     #   k-means-stable) instead of waiting for tiny residuals. None keeps
     #   the pure residual stop; solver="auto" defaults it to 1e-3.
+    compressive_signals: Optional[int] = None
+    # ^ d: filtered random signals for solver="compressive" (the embedding
+    #   width). None → O(log K) default (compressive.default_signals).
+    compressive_degree: Optional[int] = None
+    # ^ Chebyshev filter degree (Gram mat-vecs in the filtering sweep).
+    #   None → derived from the estimated λ_K / λ_{K+1} gap.
+    compressive_probes: int = 32
+    # ^ Rademacher probe vectors behind the eigencount trace estimates
+    #   (wider block, same mat-vec count — see compressive.COUNT_PROBES).
+    compressive_subset: Optional[int] = None
+    # ^ rows sampled for the compressive k-means; None → O(K log K) default.
+    compressive_lambdas: Optional[Tuple[float, float]] = None
+    # ^ warm start: a known (λ_K, λ_{K+1}) bracket — e.g. a previous fit on
+    #   the same distribution, as fig4's N-sweep does — skips the eigencount
+    #   sweep entirely, leaving only the filter's fixed mat-vec budget.
+    compressive_auto_n: Optional[int] = 1_000_000
+    # ^ solver="auto" prefers compressive at n ≥ this threshold (where the
+    #   dense (N, K+buffer) LOBPCG iterate dominates); None disables the
+    #   auto routing.
     kmeans_iters: int = 25
     kmeans_replicates: int = 10
     seed: int = 0
@@ -167,11 +191,11 @@ def plan_from_config(config: SCRBConfig, mesh=None) -> ExecutionPlan:
     """The config → plan mapping behind the three public entry points."""
     if config.chunk_size is not None and mesh is None \
             and config.solver not in ("lobpcg", "lobpcg_host", "randomized",
-                                      "auto"):
+                                      "auto", "compressive"):
         raise ValueError(
             f"chunk_size streaming requires a host-driven solver "
-            f"('lobpcg', 'lobpcg_host', 'randomized' or 'auto'), "
-            f"got {config.solver!r}")
+            f"('lobpcg', 'lobpcg_host', 'randomized', 'auto' or "
+            f"'compressive'), got {config.solver!r}")
     return ExecutionPlan(
         placement="mesh" if mesh is not None else "single",
         residency="host_chunked" if config.chunk_size is not None
@@ -187,6 +211,19 @@ def plan_from_config(config: SCRBConfig, mesh=None) -> ExecutionPlan:
 def representation(plan: ExecutionPlan):
     """The RowMatrix class a plan selects (exposed for tests/benchmarks)."""
     return _REPRESENTATIONS[(plan.placement, plan.residency)]
+
+
+def effective_solver(config: SCRBConfig, n: int) -> str:
+    """The solver a run actually executes: ``"auto"`` routes to the
+    eigendecomposition-free compressive cell once the dense (N, K+buffer)
+    iterate would dominate (n ≥ ``compressive_auto_n``); everything else is
+    taken literally. Exposed so benchmarks/tests can predict the routing."""
+    if config.solver == "compressive":
+        return "compressive"
+    if (config.solver == "auto" and config.compressive_auto_n is not None
+            and n >= config.compressive_auto_n):
+        return "compressive"
+    return config.solver
 
 
 def execute(
@@ -228,29 +265,62 @@ def execute(
             feats = rep_cls.fit_transform(x, fm, cfg, plan, key)
         with timer.stage("degrees"):
             z = rep_cls.from_features(feats, cfg, plan)
-        with timer.stage("svd"):
-            eig = z.eigenpairs(k, fold_key(key, "eig"), cfg, x0=plan.eig_x0)
-        with timer.stage("normalize"):
-            u_hat = z.map_row_chunks(row_normalize, eig.vectors)
-        km, cluster_diag = None, {}
-        if final_stage == "kmeans":
-            with timer.stage("kmeans"):
-                km, cluster_diag = z.cluster(fold_key(key, "kmeans"),
-                                             u_hat, cfg)
+        solver = effective_solver(cfg, z.n)
+        eig, comp = None, None
+        if solver == "compressive":
+            # eigendecomposition-free cell: Chebyshev-filter d = O(log K)
+            # random signals through the shared Gram mat-vec, then cluster
+            # a random subset — no (N, K+buffer) iterate anywhere
+            with timer.stage("svd"):
+                comp = compressive.compressive_embed(
+                    z, k, fold_key(key, "eig"), cfg,
+                    laplacian_normalize=plan.laplacian_normalize)
+            with timer.stage("normalize"):
+                u_hat = z.map_row_chunks(row_normalize, comp.embedding)
+            km, cluster_diag = None, {}
+            if final_stage == "kmeans":
+                with timer.stage("kmeans"):
+                    km, cluster_diag = compressive.subset_cluster(
+                        z, u_hat, fold_key(key, "kmeans"), cfg)
+        else:
+            with timer.stage("svd"):
+                eig = z.eigenpairs(k, fold_key(key, "eig"), cfg,
+                                   x0=plan.eig_x0)
+            with timer.stage("normalize"):
+                u_hat = z.map_row_chunks(row_normalize, eig.vectors)
+            km, cluster_diag = None, {}
+            if final_stage == "kmeans":
+                with timer.stage("kmeans"):
+                    km, cluster_diag = z.cluster(fold_key(key, "kmeans"),
+                                                 u_hat, cfg)
 
     fitted = feats.fmap
-    sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
+    if comp is not None:
+        # Ritz values of Â on the filtered span, padded/truncated to k so
+        # downstream consumers see the usual (K,) spectrum estimate
+        sig_full = np.sqrt(np.maximum(np.asarray(comp.theta), 0.0))
+        sigmas = np.zeros((k,), sig_full.dtype)
+        sigmas[:min(k, sig_full.shape[0])] = sig_full[:k]
+        # leading-k Ritz residuals only: the trailing d − rank directions of
+        # the filtered span are null by design, not unconverged pairs
+        resnorms = np.zeros((k,), np.float32)
+        resnorms[:min(k, comp.resnorms.shape[0])] = comp.resnorms[:k]
+        iterations = comp.iterations
+    else:
+        sigmas = np.sqrt(np.maximum(np.asarray(eig.theta), 0.0))
+        iterations, resnorms = eig.iterations, eig.resnorms
     deg_min, deg_max = z.degree_range()
     diagnostics = {
         "plan": {"placement": plan.placement, "residency": plan.residency,
                  "chunk_size": plan.chunk_size, "prefetch": plan.prefetch,
                  "impl": plan.impl},
         "feature_map": fitted.name,
-        "solver": cfg.solver,
+        "solver": solver,
+        "solver_requested": cfg.solver,
         "solver_precond": cfg.solver_precond,
         "solver_warm_start": plan.eig_x0 is not None,
-        "solver_iterations": int(eig.iterations),
-        "solver_resnorms": np.asarray(eig.resnorms),
+        "solver_iterations": int(iterations),
+        "solver_resnorms": np.asarray(resnorms),
         "degrees_min": deg_min,
         "degrees_max": deg_max,
         "n_features_D": fitted.n_features,
@@ -258,6 +328,18 @@ def execute(
                       else fitted.n_features),
     }
     diagnostics.update(z.residency_diagnostics(cfg))
+    if comp is not None:
+        est = comp.estimate
+        diagnostics["compressive"] = {
+            "lambda_k": est.lambda_k, "lambda_k1": est.lambda_k1,
+            "cutoff": est.cutoff, "filter_degree": comp.filter_degree,
+            "signals": comp.signals, "probes": est.probes,
+        }
+        if isinstance(z, rowmatrix.HostChunkedRows):
+            # the widest dense chunk on device is the d-wide filter block,
+            # not a LOBPCG (chunk, k+buffer) iterate
+            diagnostics["embedding_device_bytes_peak"] = (
+                z.store.max_chunk_rows * 4 * comp.signals)
     diagnostics.update(cluster_diag)
     if km is not None:
         diagnostics["kmeans_inertia"] = float(km.inertia)
@@ -270,7 +352,8 @@ def execute(
     state = None
     if keep_state:
         state = {"z": z, "features": feats, "eig": eig, "u_hat": u_hat,
-                 "km": km, "plan": plan}
+                 "km": km, "plan": plan,
+                 "oos_proj": None if comp is None else comp.proj}
     return SCRBResult(
         labels=None if km is None else np.asarray(km.labels),
         embedding=embedding,

@@ -43,7 +43,7 @@ surface, so ``rowmatrix.DeviceRows`` / ``HostChunkedRows`` carry either.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Protocol, Sequence, Tuple, runtime_checkable
+from typing import Optional, Protocol, Sequence, Tuple, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -509,6 +509,13 @@ class ChunkedDenseFeatures:
     def matmat(self, v: jax.Array) -> jax.Array:
         outs = [(pc @ v) * sc[:, None] for pc, sc in self._stream()]
         return jnp.concatenate(outs, axis=0)
+
+    def matmat_chunked(self, v: jax.Array) -> streaming.ChunkedDense:
+        """Ẑ v with host-chunked output (tall result never lives whole on
+        device) — same surface as ``ChunkedELL.matmat_chunked``."""
+        outs = [np.asarray((pc @ v) * sc[:, None])
+                for pc, sc in self._stream()]
+        return streaming.ChunkedDense(tuple(outs))
 
     def gram_matvec(self, u: jax.Array) -> jax.Array:
         return self.matmat(self.rmatmat(u))

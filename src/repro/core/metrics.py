@@ -6,7 +6,7 @@ Pure numpy/scipy — metrics run on host over final labelings.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Mapping, Sequence
+from typing import Dict, List, Mapping
 
 import numpy as np
 from scipy.optimize import linear_sum_assignment

@@ -118,14 +118,25 @@ class SCRBModel:
         z, eig, km = st["z"], st["eig"], st["km"]
         fitted = st["features"].fmap
         with res.timer.stage("oos_state"):
-            sig = np.asarray(res.singular_values, np.float32)
-            inv_sig = np.where(sig > 1e-6, 1.0 / np.maximum(sig, 1e-30),
-                               0.0).astype(np.float32)
-            # V = Ẑᵀ U Σ⁻¹ — one extra chunked O(NR) pass over the fitted
-            # representation (ChunkedDense-aware rmatvec on streaming plans,
-            # psum'd Ẑᵀ on mesh plans)
-            v = np.asarray(z.rmatvec(eig.vectors), np.float32) \
-                * inv_sig[None, :]
+            oos_proj = st.get("oos_proj")
+            if oos_proj is not None:
+                # compressive solver: the (D, d) filter projection q IS the
+                # serving subspace — the fit embedding was E = Ẑ q, so unit
+                # "singular values" make _projection = q exactly and
+                # predict/transform on training rows reproduce the fit
+                # embedding and labels (no extra pass needed)
+                v = np.asarray(oos_proj, np.float32)
+                sig = np.ones((v.shape[1],), np.float32)
+            else:
+                sig = np.asarray(res.singular_values, np.float32)
+                inv_sig = np.where(sig > 1e-6,
+                                   1.0 / np.maximum(sig, 1e-30),
+                                   0.0).astype(np.float32)
+                # V = Ẑᵀ U Σ⁻¹ — one extra chunked O(NR) pass over the
+                # fitted representation (ChunkedDense-aware rmatvec on
+                # streaming plans, psum'd Ẑᵀ on mesh plans)
+                v = np.asarray(z.rmatvec(eig.vectors), np.float32) \
+                    * inv_sig[None, :]
             dual = np.asarray(z.degree_dual(), np.float32)
         res.state = None          # drop the O(N) internals; model is O(D·K)
         return cls(

@@ -15,14 +15,13 @@ matrix ``idx int32 (N, R)`` — exactly the paper's O(NR) memory, static shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops
-from repro.kernels.ref import HASH_MIX
 
 
 @jax.tree_util.register_pytree_node_class

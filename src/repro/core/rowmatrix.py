@@ -89,8 +89,10 @@ class RowMatrix(Protocol):
     def degree_range(self) -> Tuple[float, float]: ...
     def degree_dual(self) -> np.ndarray: ...   # (D,) out-of-sample degrees
     def matvec(self, v): ...          # Ẑ v : (D, K) → tall
+    def matvec_tall(self, v): ...     # Ẑ v in the native tall type
     def rmatvec(self, u): ...         # Ẑᵀ u : tall → (D, K)
     def gram(self, u): ...            # (Ẑ Ẑᵀ) u : tall → tall
+    def random_tall(self, key, width: int, dist: str = "normal"): ...
     def map_row_chunks(self, fn: Callable, *tall): ...
     def reduce(self, fn: Callable, init, *tall): ...
     def eigenpairs(self, k: int, key: jax.Array, cfg,
@@ -150,11 +152,19 @@ class DeviceRows:
     def matvec(self, v):
         return self.adj.matmat(v)
 
+    def matvec_tall(self, v):
+        return self.adj.matmat(v)
+
     def rmatvec(self, u):
         return self.adj.rmatmat(u)
 
     def gram(self, u):
         return self.adj.gram_matvec(u)
+
+    def random_tall(self, key, width, dist="normal"):
+        if dist == "rademacher":
+            return jax.random.rademacher(key, (self.n, width), jnp.float32)
+        return jax.random.normal(key, (self.n, width), jnp.float32)
 
     def map_row_chunks(self, fn, *tall):
         return fn(*tall)
@@ -265,6 +275,23 @@ class HostChunkedRows:
     def matvec(self, v):
         return self.store.matmat(v)
 
+    def matvec_tall(self, v):
+        """Ẑ v with the representation's native tall output — host-resident
+        row chunks (``matvec`` concatenates on device, which is exactly the
+        O(N·K) allocation the compressive path must avoid)."""
+        return self.store.matmat_chunked(jnp.asarray(v, jnp.float32))
+
+    def random_tall(self, key, width, dist="normal"):
+        """A host-chunked random tall block: each chunk gets an
+        independently folded key, so no (N, width) array is ever built."""
+        sizes = self.store.chunk_sizes
+        if dist == "rademacher":
+            return streaming.ChunkedDense(tuple(
+                np.asarray(jax.random.rademacher(
+                    jax.random.fold_in(key, i), (s, width), jnp.float32))
+                for i, s in enumerate(sizes)))
+        return streaming.ChunkedDense.random_normal(key, sizes, width)
+
     def rmatvec(self, u):
         if isinstance(u, streaming.ChunkedDense):
             return self.store.rmatmat_chunked(u)
@@ -357,6 +384,8 @@ class MeshRows:
     chunk_size: Optional[int] = None
     compress: bool = False
     counts: Optional[jax.Array] = None   # (D,) replicated Zᵀ1 (degree dual)
+    _gram_cache: Any = dataclasses.field(default=None, repr=False,
+                                         compare=False)
 
     @classmethod
     def fit_transform(cls, x, fm, cfg, plan, key) -> FittedFeatures:
@@ -440,15 +469,32 @@ class MeshRows:
             return float(jnp.min(self.degrees)), float(jnp.max(self.degrees))
 
     def _gram_fn(self):
-        from repro.core.distributed import make_gram_matvec
-        return make_gram_matvec(self.mesh, self.idx, self.rowscale, self.d,
-                                self.d_g, self.impl, compress=self.compress,
-                                chunk_size=self.chunk_size)
+        # built once per representation: repeated eager calls (the
+        # compressive Chebyshev recurrence applies it O(degree) times)
+        # must hit one traced shard_map, not rebuild it per mat-vec
+        if self._gram_cache is None:
+            from repro.core.distributed import make_gram_matvec
+            self._gram_cache = make_gram_matvec(
+                self.mesh, self.idx, self.rowscale, self.d,
+                self.d_g, self.impl, compress=self.compress,
+                chunk_size=self.chunk_size)
+        return self._gram_cache
 
     def matvec(self, v):
         with self.mesh:
             return ops.z_matmul(self.idx, v, self.rowscale, d_g=self.d_g,
                                 impl=self.impl)
+
+    def matvec_tall(self, v):
+        return self.matvec(v)   # already row-sharded (idx carries the spec)
+
+    def random_tall(self, key, width, dist="normal"):
+        with self.mesh:
+            if dist == "rademacher":
+                r = jax.random.rademacher(key, (self.n, width), jnp.float32)
+            else:
+                r = jax.random.normal(key, (self.n, width), jnp.float32)
+            return jax.device_put(r, self._row_sharding(self.mesh))
 
     def rmatvec(self, u):
         from repro.core.distributed import make_zt_matvec
@@ -458,6 +504,9 @@ class MeshRows:
                                   chunk_size=self.chunk_size)(u)
 
     def gram(self, u):
+        # the cached closure hits shard_map's dispatch cache on repeat
+        # applications; wrapping it in jax.jit would re-bake the sharded
+        # idx/rowscale closures as constants (and can wedge the collective)
         with self.mesh:
             return self._gram_fn()(u)
 

@@ -235,6 +235,15 @@ class ChunkedELL:
         """(Ẑ Ẑᵀ) u — eager streaming operator for ``lobpcg_host``."""
         return self.matmat(self.rmatmat(u))
 
+    def matmat_chunked(self, v: jax.Array) -> ChunkedDense:
+        """Ẑ v : (D, K) → host-chunked (N, K) — the tall output stays on
+        host, one ELL chunk + the (D, K) operand on device at a time."""
+        outs = [
+            np.asarray(ops.z_matmul(ic, v, sc, d_g=self.d_g, impl=self.impl))
+            for ic, sc in self._stream()
+        ]
+        return ChunkedDense(tuple(outs))
+
     def rmatmat_chunked(self, u: "ChunkedDense") -> jax.Array:
         """Ẑᵀ u with a host-chunked ``u`` aligned to the ELL chunking: one
         (D, K) accumulator, one chunk pair on device at a time — the pass

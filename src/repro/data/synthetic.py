@@ -8,7 +8,7 @@ at a configurable scale factor so benchmark shapes track the paper's.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 

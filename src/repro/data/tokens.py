@@ -10,9 +10,8 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
-import jax
 import numpy as np
 
 

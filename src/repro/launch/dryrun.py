@@ -72,7 +72,6 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, out_path: str) -> dict
     from repro.configs import SHAPES, get_config, shape_applicable
     from repro.launch.mesh import make_production_mesh
     from repro.launch.specs import build_cell
-    from repro.utils import tree_bytes
 
     cfg = get_config(arch)
     shape = SHAPES[shape_name]

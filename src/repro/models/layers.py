@@ -12,14 +12,13 @@ Conventions:
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.config import ModelConfig, MoEConfig, SSMConfig, Segment
+from repro.models.config import ModelConfig
 
 Params = Dict[str, Any]
 NEG_INF = -1e30

@@ -11,7 +11,6 @@ Public entry points (all pure functions of (config, params, ...)):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

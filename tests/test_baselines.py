@@ -22,7 +22,9 @@ def test_registry_covers_every_method():
     """No silently dropped method: every Table-2 key is present, and every
     feature-map method points at a registered map."""
     assert set(METHOD_FEATURE_MAPS) == set(METHODS)
-    assert len(METHODS) == 9
+    # the paper's 9 methods + the compressive SC_RB variant (PR 7)
+    assert len(METHODS) == 10
+    assert "csc_rb" in METHODS
     backed = {v for v in METHOD_FEATURE_MAPS.values() if v is not None}
     assert backed <= set(FEATURE_MAPS)
     # all four registered maps are exercised by at least one method

@@ -1,0 +1,241 @@
+"""The eigendecomposition-free compressive solver (solver="compressive").
+
+Small-N graphs keep every case in the fast tier: the dense Â = Ẑ Ẑᵀ (via
+``z.gram(I)``) gives the exact spectrum/projector the polynomial machinery
+is checked against. Estimator cases pin their probe keys — the Hutchinson
+moments are stochastic, and tests assert the fixed-seed draw, not a tail
+bound.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import SCRBConfig, compressive, executor, featuremap, metrics
+from repro.core.eigensolver import top_k_eigenpairs
+from repro.core.model import SCRBModel
+from repro.data.synthetic import make_blobs
+
+CFG = dict(n_clusters=3, n_grids=32, sigma=1.5, d_g=256,
+           kmeans_replicates=2, seed=0)
+
+
+def _rows(x, cfg, plan=None):
+    """A fitted RowMatrix exactly as the executor builds it."""
+    plan = plan or executor.plan_from_config(cfg)
+    fm = featuremap.from_config(cfg, impl=plan.impl)
+    key = jax.random.PRNGKey(cfg.seed)
+    rep = executor.representation(plan)
+    feats = rep.fit_transform(jnp.asarray(x), fm, cfg, plan, key)
+    return rep.from_features(feats, cfg, plan)
+
+
+def _dense_spectrum(z):
+    a = np.asarray(z.gram(jnp.eye(z.n, dtype=jnp.float32)))
+    a = 0.5 * (a + a.T)
+    lam, v = np.linalg.eigh(a)
+    return lam[::-1], v[:, ::-1]     # descending
+
+
+@pytest.fixture(scope="module")
+def clustered():
+    """3 separated blobs: λ = (1.00, 0.89, 0.67 | 0.19, …) — a clean gap
+    after λ_3."""
+    x, y = make_blobs(160, 5, 3, seed=0)
+    z = _rows(x, SCRBConfig(**CFG))
+    lam, v = _dense_spectrum(z)
+    return x, y, z, lam, v
+
+
+@pytest.fixture(scope="module")
+def degenerate():
+    """4 tight blobs but K=2: λ_2 ≈ λ_3 (0.880 vs 0.860) — the gap the
+    dichotomy must not rely on."""
+    x, _ = make_blobs(200, 5, 4, seed=1)
+    cfg = SCRBConfig(n_clusters=2, n_grids=32, sigma=0.5, d_g=256, seed=0)
+    z = _rows(x, cfg)
+    lam, _ = _dense_spectrum(z)
+    return z, lam
+
+
+# --------------------------------------------------------------------------
+# polynomial filter vs the exact spectral projector
+# --------------------------------------------------------------------------
+
+def test_chebyshev_sweep_matches_exact_polynomial(clustered):
+    """The three-term recurrence against z.gram reproduces V h(Λ) Vᵀ r —
+    the same polynomial evaluated through the dense eigendecomposition —
+    to float32 roundoff."""
+    _, _, z, lam, v = clustered
+    cutoff = 0.5 * (lam[2] + lam[3])
+    coeffs = compressive.step_coeffs(cutoff, 60)
+    r = z.random_tall(jax.random.PRNGKey(1), 4)
+    filt, _, nmv = compressive.chebyshev_sweep(z, r, 60, coeffs=coeffs)
+    assert nmv == 60        # exactly one Gram mat-vec per degree
+    exact = v @ (compressive.step_eval(coeffs, lam)[:, None]
+                 * (v.T @ np.asarray(r)))
+    assert np.abs(np.asarray(filt) - exact).max() < 1e-4
+
+
+def test_damped_step_approximates_projector(clustered):
+    """With the cutoff mid-gap and degree ≫ 3/gap, the Jackson-damped step
+    is the top-K spectral projector: filtered signals land in span(V_K)."""
+    _, _, z, lam, v = clustered
+    cutoff = 0.5 * (lam[2] + lam[3])
+    coeffs = compressive.step_coeffs(cutoff, 60)
+    r = z.random_tall(jax.random.PRNGKey(1), 4)
+    filt, _, _ = compressive.chebyshev_sweep(z, r, 60, coeffs=coeffs)
+    fn = np.asarray(filt)
+    vk = v[:, :3]
+    proj = vk @ (vk.T @ np.asarray(r))
+    assert np.linalg.norm(fn - proj) / np.linalg.norm(np.asarray(r)) < 5e-2
+    # essentially all of the filtered energy lives in the top-K eigenspace
+    assert np.linalg.norm(vk.T @ fn) / np.linalg.norm(fn) > 0.999
+
+
+def test_jackson_damping_shape():
+    g = compressive.jackson_damping(40)
+    assert g.shape == (41,)
+    assert g[0] == pytest.approx(1.0)
+    assert abs(g[-1]) < 5e-3                    # kills the Gibbs tail
+    assert np.all(np.diff(g) < 1e-12)           # monotone decreasing
+
+
+# --------------------------------------------------------------------------
+# λ_K estimation by eigencount dichotomy
+# --------------------------------------------------------------------------
+
+def test_lambda_k_estimation_clustered(clustered):
+    _, _, z, lam, _ = clustered
+    est, nmv = compressive.estimate_lambda_k(z, 3, jax.random.PRNGKey(0))
+    assert nmv == compressive.COUNT_DEGREE
+    assert est.lambda_k == pytest.approx(lam[2], abs=0.06)
+    assert est.lambda_k1 == pytest.approx(lam[3], abs=0.06)
+    # the cutoff brackets the true gap, and the cached moments price the
+    # count at any threshold without further mat-vecs
+    assert lam[3] < est.cutoff < lam[2]
+    count = compressive.eigencount(est.moments, est.probes, est.cutoff)
+    assert count == pytest.approx(3.0, abs=0.75)
+
+
+def test_lambda_k_estimation_degenerate(degenerate):
+    """λ_2 ≈ λ_3: the two crossings collapse toward the shared eigenvalue;
+    the midpoint cutoff stays next to it and the derived filter degree
+    clamps instead of diverging with 1/gap."""
+    z, lam = degenerate
+    est, _ = compressive.estimate_lambda_k(z, 2, jax.random.PRNGKey(0))
+    assert est.lambda_k == pytest.approx(lam[1], abs=0.05)
+    assert est.lambda_k1 == pytest.approx(lam[2], abs=0.05)
+    assert est.lambda_k1 <= est.cutoff <= est.lambda_k
+    assert 24 <= compressive.default_filter_degree(est) <= 96
+
+
+def test_defaults_scale():
+    assert compressive.default_signals(2) >= 4
+    assert compressive.default_signals(64) > compressive.default_signals(4)
+    assert compressive.default_subset(100, 8) == 100       # capped at N
+    assert compressive.default_subset(10**6, 8) < 10**4    # O(K log K) ≪ N
+
+
+# --------------------------------------------------------------------------
+# the full cell through the executor
+# --------------------------------------------------------------------------
+
+def test_compressive_clusters_and_reports(clustered):
+    x, y, _, lam, _ = clustered
+    cfg = SCRBConfig(**CFG, solver="compressive")
+    res = executor.execute(x, cfg)
+    assert metrics.accuracy(res.labels, y) > 0.95
+    d = res.diagnostics
+    assert d["solver"] == "compressive"
+    assert d["solver_requested"] == "compressive"
+    comp = d["compressive"]
+    assert lam[3] < comp["cutoff"] < lam[2]
+    assert comp["signals"] >= 4
+    # iterations = count sweep + filter sweep + the projection round trips
+    assert d["solver_iterations"] == (compressive.COUNT_DEGREE
+                                      + comp["filter_degree"] + 3)
+    # leading-K Ritz pairs of Â on the filtered span are converged
+    assert np.asarray(d["solver_resnorms"]).shape == (3,)
+    assert np.asarray(d["solver_resnorms"]).max() < 0.05
+    assert np.asarray(res.singular_values).shape == (3,)
+    assert res.singular_values[0] == pytest.approx(1.0, abs=1e-2)
+
+
+def test_lambda_warm_start_skips_eigencount(clustered):
+    """compressive_lambdas=(λ_K, λ_{K+1}) replaces the eigencount sweep:
+    the svd stage pays only filter_degree + 3 mat-vecs, and with the same
+    bracket the partition matches the cold run (fig4's sweep hands each
+    point's estimate to the next through exactly this path)."""
+    x, y, _, _, _ = clustered
+    cold = executor.execute(x, SCRBConfig(**CFG, solver="compressive"))
+    cd = cold.diagnostics["compressive"]
+    cfg = SCRBConfig(**CFG, solver="compressive",
+                     compressive_lambdas=(cd["lambda_k"], cd["lambda_k1"]))
+    warm = executor.execute(x, cfg)
+    wd = warm.diagnostics["compressive"]
+    assert wd["probes"] == 0
+    assert warm.diagnostics["solver_iterations"] == wd["filter_degree"] + 3
+    assert wd["cutoff"] == pytest.approx(
+        0.5 * (cd["lambda_k"] + cd["lambda_k1"]))
+    assert metrics.accuracy(warm.labels, cold.labels) == pytest.approx(1.0)
+    assert metrics.accuracy(warm.labels, y) > 0.95
+
+
+def test_chunked_vs_device_label_parity(clustered):
+    """host_chunked runs the identical algorithm (same keys, same subset)
+    chunk-streamed: labels match the device cell exactly and the widest
+    device-resident block is the d-wide filter chunk — no (N, K) array."""
+    x, _, _, _, _ = clustered
+    cfg = SCRBConfig(**CFG, solver="compressive")
+    dev = executor.execute(x, cfg)
+    cfg_c = dataclasses.replace(cfg, chunk_size=48)
+    chu = executor.execute(x, cfg_c, executor.plan_from_config(cfg_c))
+    assert metrics.accuracy(chu.labels, dev.labels) == pytest.approx(1.0)
+    d = chu.diagnostics
+    sig = d["compressive"]["signals"]
+    assert d["embedding_device_bytes_peak"] == 48 * 4 * sig
+    assert d["embedding_device_bytes_peak"] < x.shape[0] * 4 * 3
+
+
+def test_auto_routing_by_n(clustered):
+    x, _, _, _, _ = clustered
+    small = SCRBConfig(**CFG, solver="auto")
+    assert executor.effective_solver(small, x.shape[0]) != "compressive"
+    routed = dataclasses.replace(small, compressive_auto_n=100)
+    assert executor.effective_solver(routed, x.shape[0]) == "compressive"
+    assert executor.effective_solver(
+        dataclasses.replace(small, compressive_auto_n=None), 10**9) != \
+        "compressive"
+    res = executor.execute(x, routed)
+    assert res.diagnostics["solver"] == "compressive"
+    assert res.diagnostics["solver_requested"] == "auto"
+
+
+def test_model_oos_path_reproduces_fit(clustered):
+    """SCRBModel factors the embedding through q = Ẑᵀ h(Â)R: serving the
+    training rows reproduces the fit labels exactly (same projection, same
+    centroids), and transform matches the fit embedding."""
+    x, _, _, _, _ = clustered
+    cfg = SCRBConfig(**CFG, solver="compressive")
+    model = SCRBModel.fit(x, cfg)
+    np.testing.assert_array_equal(model.predict(x), model.fit_result.labels)
+    emb = model.transform(x)
+    assert np.abs(emb - np.asarray(model.fit_result.embedding)).max() < 1e-5
+
+
+def test_eigensolver_rejects_compressive(clustered):
+    _, _, z, _, _ = clustered
+    with pytest.raises(ValueError, match="compressive"):
+        top_k_eigenpairs(z.gram, z.n, 3, jax.random.PRNGKey(0),
+                         solver="compressive")
+
+
+def test_compressive_requires_laplacian_normalize(clustered):
+    x, _, z, _, _ = clustered
+    cfg = SCRBConfig(**CFG, solver="compressive")
+    with pytest.raises(ValueError, match="laplacian_normalize"):
+        compressive.compressive_embed(z, 3, jax.random.PRNGKey(0), cfg,
+                                      laplacian_normalize=False)

@@ -19,7 +19,7 @@ import pytest
 
 from repro.core import SCRBConfig, executor, metrics, sc_rb, spectral_embed
 from repro.core.executor import ExecutionPlan, plan_from_config
-from repro.core.rowmatrix import DeviceRows, HostChunkedRows, MeshRows
+from repro.core.rowmatrix import DeviceRows, HostChunkedRows
 from repro.data.synthetic import make_rings
 
 # Same (N, R, d_g) as tests/test_pipeline.test_scrb_smoke_fast and the
@@ -226,12 +226,16 @@ labels, timer = sc_rb_distributed(x, SCRBConfig(**base), mesh)
 cfg_c = SCRBConfig(**base, chunk_size=64)
 res = executor.execute(x, cfg_c, executor.plan_from_config(cfg_c, mesh=mesh))
 
-# solver routing: lanczos/subspace run through the mesh plan too (the
-# eager drivers against the shard_map'd Gram mat-vec) and agree with the
-# single-device run of the same solver
+# solver routing: lanczos/subspace/compressive run through the mesh plan
+# too (the eager drivers against the shard_map'd Gram mat-vec) and agree
+# with the single-device run of the same solver. compressive pins a small
+# filter degree: at this deliberately weak config the auto degree clamps
+# to its ceiling, and same-solver parity is degree-independent (both
+# placements draw identical random signals from the same key).
 solver_parity = {}
-for solver in ("subspace", "lanczos"):
-    cfg_s = SCRBConfig(**base, solver=solver, solver_iters=60)
+for solver, extra in (("subspace", {}), ("lanczos", {}),
+                      ("compressive", {"compressive_degree": 32})):
+    cfg_s = SCRBConfig(**base, solver=solver, solver_iters=60, **extra)
     ref_s = sc_rb(jnp.asarray(x), cfg_s)
     res_s = executor.execute(x, cfg_s,
                              executor.plan_from_config(cfg_s, mesh=mesh))
@@ -282,8 +286,11 @@ def test_mesh_plans_match_single_shot(mesh_result):
 
 
 def test_mesh_routes_all_solvers(mesh_result):
-    """cfg.solver lanczos/subspace route through the mesh plan (ROADMAP item)
-    and reproduce the single-device labels for the same solver."""
+    """cfg.solver lanczos/subspace/compressive route through the mesh plan
+    (ROADMAP item) and reproduce the single-device labels for the same
+    solver."""
+    assert set(mesh_result["solver_parity"]) == {
+        "subspace", "lanczos", "compressive"}
     for solver, agree in mesh_result["solver_parity"].items():
         assert agree >= 0.97, (solver, agree)
 

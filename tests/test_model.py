@@ -1,6 +1,5 @@
 """Fitted-model API: out-of-sample consistency, serialization, and the
 O(D·K)-state guarantee of ``repro.core.model.SCRBModel``."""
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np

@@ -71,7 +71,6 @@ def test_decode_matches_forward(arch):
 
     # reference: full forward logits at every position
     h, _ = T.forward_hidden(cfg, params, batch)
-    from repro.models.layers import rmsnorm
     head = params["embed"].T if cfg.tie_embeddings else params["head"]
     ref_logits = np.asarray(
         (h.astype(jnp.float32) @ head.astype(jnp.float32)))

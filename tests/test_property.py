@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import rb
 from repro.core.metrics import accuracy, nmi, rand_index
-from repro.kernels import ops, ref
+from repro.kernels import ops
 
 jax.config.update("jax_platform_name", "cpu")
 

@@ -4,7 +4,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import smoke_config
 from repro.models import transformer as T
 from repro.models.config import ModelConfig, dense_segments
 from repro.serve.engine import Engine, ServeConfig, sample

@@ -10,7 +10,6 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config
 from repro.models import sharding as sh
 
 

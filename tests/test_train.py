@@ -10,8 +10,8 @@ from repro.configs import smoke_config
 from repro.data.tokens import MemmapTokens, SyntheticTokens
 from repro.models import transformer as T
 from repro.train import checkpoint as ckpt
-from repro.train.optimizer import (OptConfig, apply_updates, global_norm,
-                                   init_opt_state, schedule)
+from repro.train.optimizer import (OptConfig, apply_updates, init_opt_state,
+                                   schedule)
 from repro.train.trainer import TrainConfig, Trainer, make_train_step
 
 
