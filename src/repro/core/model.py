@@ -34,7 +34,6 @@ model's.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import json
 from typing import Any, Optional
 
@@ -46,24 +45,54 @@ from repro.core import executor as _executor, featuremap, streaming
 from repro.core.kmeans import row_normalize
 from repro.kernels import ops
 
+#: Serialization format. Major bumps break ``load`` (reject with a clear
+#: error); minor bumps are additive and readable by any same-major build.
+FORMAT_VERSION = "1.1"
 
-@functools.partial(jax.jit, static_argnames=("laplacian",))
-def _oos_embed(fm, dual, proj, x, *, laplacian: bool) -> jax.Array:
-    """The jit-able out-of-sample embedding of a feature-map pytree ``fm``:
-    transform → fitted-degree normalize → project onto V Σ⁻¹ → row-normalize.
-    """
+#: Geometric batch-bucket grid shared by ``transform``/``predict`` and the
+#: serving engine (``serve.cluster_engine``). Padding every batch up to a
+#: bucket means each (model, bucket, mode) pair compiles exactly once; all
+#: out-of-sample ops are row-local, so zero-padded rows never contaminate
+#: real rows and slicing the output back is bit-identical (regression-tested).
+BUCKET_GRID = (64, 256, 1024, 4096)
+
+
+def _ceil_to(n: int, m: int) -> int:
+    return -(-n // m) * m
+
+
+def round_to_bucket(n: int, grid=BUCKET_GRID, *, multiple_of: int = 1) -> int:
+    """Smallest bucket in ``grid`` that fits ``n`` rows; above the top
+    bucket, the next multiple of the top bucket. ``multiple_of`` lifts the
+    result so mesh paths can shard the padded batch evenly."""
+    if n < 1:
+        raise ValueError(f"need at least one row, got {n}")
+    top = grid[-1]
+    size = next((b for b in grid if n <= b), _ceil_to(n, top))
+    return _ceil_to(size, multiple_of) if multiple_of > 1 else size
+
+
+def _oos_embed_impl(fm, dual, proj, x, *, laplacian: bool) -> jax.Array:
+    """Out-of-sample embedding of a feature-map pytree ``fm``: transform →
+    fitted-degree normalize → project onto V Σ⁻¹ → row-normalize. Plain
+    function so callers (the serving engine) can AOT-compile it per batch
+    bucket with their own donation policy."""
     feats = fm.transform(jnp.asarray(x, jnp.float32))
     deg = fm.oos_degrees(feats, dual)
     scale = fm.oos_rowscale(deg, laplacian=laplacian)
     return row_normalize(fm.project(feats, scale, proj))
 
 
-@functools.partial(jax.jit, static_argnames=("laplacian", "impl"))
-def _oos_predict(fm, dual, proj, cents, x, *, laplacian: bool,
-                 impl: str) -> jax.Array:
-    u = _oos_embed(fm, dual, proj, x, laplacian=laplacian)
+def _oos_predict_impl(fm, dual, proj, cents, x, *, laplacian: bool,
+                      impl: str) -> jax.Array:
+    u = _oos_embed_impl(fm, dual, proj, x, laplacian=laplacian)
     labels, _ = ops.kmeans_assign(u, cents, impl=impl)
     return labels
+
+
+_oos_embed = jax.jit(_oos_embed_impl, static_argnames=("laplacian",))
+_oos_predict = jax.jit(_oos_predict_impl, static_argnames=("laplacian",
+                                                           "impl"))
 
 
 @dataclasses.dataclass
@@ -160,34 +189,113 @@ class SCRBModel:
                            0.0).astype(np.float32)
         return self.right_vectors * inv_sig[None, :]
 
-    def transform(self, x, *, batch_size: Optional[int] = None) -> np.ndarray:
-        """Out-of-sample spectral embedding (n_new, K), streamed in batches
-        of ``batch_size`` rows (peak device residency O(batch·(R+K)))."""
-        proj = jnp.asarray(self._projection)
+    def _serve_setup(self, mesh, *, with_centroids: bool):
+        """Device-side serving state + (sharding, n_shards) for one call.
+
+        With a mesh the O(D·K) state is replicated (it is tiny — that is the
+        whole point of the artifact) and batches are row-sharded exactly like
+        ``MeshRows``, so the jitted OOS ops run SPMD with no code changes.
+        """
+        fm = self.feature_map
         dual = jnp.asarray(self.degree_dual)
+        proj = jnp.asarray(self._projection)
+        cents = jnp.asarray(self.centroids) if with_centroids else None
+        if mesh is None:
+            return fm, dual, proj, cents, None, 1
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        from repro.core import rowmatrix
+        axes = rowmatrix.MeshRows._axes(mesh)
+        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        rep = NamedSharding(mesh, PartitionSpec())
+        fm, dual, proj = jax.device_put((fm, dual, proj), rep)
+        if cents is not None:
+            cents = jax.device_put(cents, rep)
+        return fm, dual, proj, cents, rowmatrix.MeshRows._row_sharding(mesh), \
+            n_shards
+
+    @staticmethod
+    def _serve_batches(x, batch_size, sharding, n_shards):
+        """Yield (device_batch, n_real_rows) pairs, zero-padding each chunk
+        up to the bucket grid (``batch_size`` set) and/or to a multiple of
+        ``n_shards`` (mesh). ``batch_size=None`` on a single device keeps the
+        legacy unpadded single-compile path byte-for-byte."""
+        eff = None if batch_size is None else \
+            round_to_bucket(batch_size, multiple_of=n_shards)
+        for c in streaming.as_row_chunks(x, eff):
+            c = np.asarray(c, np.float32)
+            rows = c.shape[0]
+            if batch_size is not None and rows > 0:
+                target = round_to_bucket(rows, multiple_of=n_shards)
+            elif n_shards > 1:
+                target = _ceil_to(max(rows, 1), n_shards)
+            else:
+                target = rows
+            if target != rows:
+                pad = np.zeros((target, c.shape[1]), np.float32)
+                pad[:rows] = c
+                c = pad
+            xb = jnp.asarray(c) if sharding is None \
+                else jax.device_put(c, sharding)
+            yield xb, rows
+
+    def transform(self, x, *, batch_size: Optional[int] = None,
+                  mesh=None) -> np.ndarray:
+        """Out-of-sample spectral embedding (n_new, K), streamed in batches
+        of ``batch_size`` rows (peak device residency O(batch·(R+K))).
+
+        ``batch_size`` is rounded up to the serving bucket grid
+        (``BUCKET_GRID``) and every chunk — ragged tail included — is
+        zero-padded to its bucket, so repeated ad-hoc calls reuse at most
+        ``len(BUCKET_GRID)`` compiled shapes instead of one per ragged
+        batch. Padded rows are sliced off; outputs are bit-identical to the
+        unpadded path. ``mesh`` replicates the state and row-shards batches.
+        """
+        fm, dual, proj, _, sharding, n_shards = \
+            self._serve_setup(mesh, with_centroids=False)
         outs = [
-            np.asarray(_oos_embed(self.feature_map, dual, proj, c,
-                                  laplacian=self.laplacian_normalize))
-            for c in streaming.as_row_chunks(x, batch_size)
+            np.asarray(_oos_embed(fm, dual, proj, xb,
+                                  laplacian=self.laplacian_normalize))[:rows]
+            for xb, rows in self._serve_batches(x, batch_size, sharding,
+                                                n_shards)
         ]
         return np.concatenate(outs, axis=0)
 
-    def predict(self, x, *, batch_size: Optional[int] = None) -> np.ndarray:
-        """Nearest-fitted-centroid labels for new points, (n_new,) int32."""
+    def predict(self, x, *, batch_size: Optional[int] = None,
+                mesh=None) -> np.ndarray:
+        """Nearest-fitted-centroid labels for new points, (n_new,) int32.
+
+        Batching/padding/mesh semantics are identical to ``transform``.
+        """
         if self.centroids is None:
             raise ValueError(
                 "model has no centroids (fit stopped before the k-means "
                 "stage); use transform() or refit with final_stage='kmeans'")
-        proj = jnp.asarray(self._projection)
-        dual = jnp.asarray(self.degree_dual)
-        cents = jnp.asarray(self.centroids)
+        fm, dual, proj, cents, sharding, n_shards = \
+            self._serve_setup(mesh, with_centroids=True)
         outs = [
-            np.asarray(_oos_predict(self.feature_map, dual, proj, cents, c,
+            np.asarray(_oos_predict(fm, dual, proj, cents, xb,
                                     laplacian=self.laplacian_normalize,
-                                    impl=self.config.impl))
-            for c in streaming.as_row_chunks(x, batch_size)
+                                    impl=self.config.impl))[:rows]
+            for xb, rows in self._serve_batches(x, batch_size, sharding,
+                                                n_shards)
         ]
         return np.concatenate(outs, axis=0)
+
+    @property
+    def data_dim(self) -> Optional[int]:
+        """Input dimensionality d expected by ``transform``/``predict``,
+        recovered from the fitted map's state (None for unknown map types).
+        The serving engine uses this to pre-allocate staging buffers and
+        warm the jit cache before the first request arrives."""
+        field, axis = {"rb": ("widths", -1), "rff": ("w", 0),
+                       "nystrom": ("landmarks", -1),
+                       "lsc": ("anchors", -1)}.get(
+            getattr(self.feature_map, "name", None), (None, None))
+        state = self.feature_map.state_dict()
+        if field is None or field not in state:
+            return None
+        return int(np.asarray(state[field]).shape[axis])
 
     @property
     def nbytes(self) -> int:
@@ -205,11 +313,12 @@ class SCRBModel:
         if cfg.get("block_rows") is not None:
             cfg["block_rows"] = dict(cfg["block_rows"])
         meta = {
-            "format_version": 1,
+            "format_version": FORMAT_VERSION,
             "config": cfg,
             "laplacian_normalize": bool(self.laplacian_normalize),
             "has_centroids": self.centroids is not None,
             "feature_map": self.feature_map.meta_dict(),
+            "data_dim": self.data_dim,          # 1.1: serving convenience
         }
         arrays = {
             "degree_dual": self.degree_dual,
@@ -229,9 +338,20 @@ class SCRBModel:
     def load(cls, path: str) -> "SCRBModel":
         with np.load(path, allow_pickle=False) as npz:
             meta = json.loads(bytes(npz["_meta"].tobytes()).decode("utf-8"))
-            if meta.get("format_version") != 1:
+            ver = meta.get("format_version")
+            # v1.0 artifacts stamped the bare int 1; ≥1.1 stamps "major.minor"
+            try:
+                major = ver if isinstance(ver, int) \
+                    else int(str(ver).split(".", 1)[0])
+            except ValueError:
+                major = None
+            if major != int(FORMAT_VERSION.split(".", 1)[0]):
                 raise ValueError(
-                    f"unsupported model format {meta.get('format_version')!r}")
+                    f"unsupported model artifact format_version={ver!r}: "
+                    f"this build reads major "
+                    f"{FORMAT_VERSION.split('.', 1)[0]} "
+                    f"(writes {FORMAT_VERSION}); re-save the model with a "
+                    "matching repro version")
             fm_arrays = {k[3:]: npz[k] for k in npz.files
                          if k.startswith("fm_")}
             fitted = featuremap.load_fitted(meta["feature_map"], fm_arrays)

@@ -1,0 +1,405 @@
+"""Continuous-batching predict serving engine over fitted ``SCRBModel``s.
+
+The LM engine next door (``serve/engine.py``) serves a fixed-shape decode
+step from fixed slots; predict serving inverts the problem — the *model*
+state is tiny (O(D·K)) and fixed, the *requests* are ragged. ``ClusterEngine``
+therefore batches on rows, not slots:
+
+- **Bucketed jit cache** — requests for one (model, mode) are coalesced and
+  padded up to a small geometric bucket grid (``model.BUCKET_GRID``), so each
+  (model, bucket, mode) triple is AOT-compiled exactly once
+  (``jax.jit(...).lower(...).compile()``) into ``_cells``. All out-of-sample
+  ops are row-local, so zero rows in the pad tail never contaminate real
+  rows; outputs are sliced back per request and are bit-identical to direct
+  ``model.predict`` (gated in ``benchmarks/serve_bench.py``).
+- **Donated staging ring** — each bucket shape owns a small ring of reusable
+  host staging buffers (``_StagingRing``); batches are assembled into a ring
+  slot, shipped H2D once, and (off CPU) donated to the compiled call, so
+  steady-state serving allocates no new host buffers per request. The ring's
+  ``allocations`` counter is the bench's "steady-state allocations" gate.
+- **Multi-model LRU** — many artifacts are registered by name
+  (``load_model`` takes an npz path or a fitted model; re-loading a name is
+  a hot-swap). Device-resident O(D·K) states live in an LRU
+  (``max_resident_models`` / ``device_budget_bytes``); eviction drops device
+  buffers but *keeps compiled cells* — they close over shapes only, state is
+  passed as arguments, so a re-faulted model pays one H2D, zero recompiles.
+
+The engine is synchronous and single-threaded by design: ``submit`` enqueues
+and returns a ticket, ``step`` runs one coalesced device batch, ``drain``
+runs until idle, ``take`` collects a finished ticket. ``serve/server.py``
+puts a stdlib-HTTP front end (with a lock) over the same loop, and
+``predict``/``transform`` are one-call sync wrappers — benchmarks, tests,
+and the server all exercise the identical path.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import itertools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import model as _model
+
+MODES = ("predict", "transform")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Knobs for ``ClusterEngine``. Defaults suit the CI smoke mix."""
+
+    buckets: Tuple[int, ...] = _model.BUCKET_GRID
+    max_resident_models: int = 4          # LRU capacity (count)
+    device_budget_bytes: Optional[int] = None   # LRU capacity (bytes)
+    ring_slots: int = 2                   # staging buffers per bucket shape
+    donate: str = "auto"                  # "auto" | "on" | "off" — donate the
+    # H2D batch buffer to the compiled call; "auto" enables it off-CPU only
+    # (CPU XLA can't donate and warns)
+    max_batch_rows: Optional[int] = None  # coalescing cap per device launch;
+    # None → top bucket
+    impl: Optional[str] = None            # kmeans_assign impl override
+
+    def __post_init__(self):
+        if self.donate not in ("auto", "on", "off"):
+            raise ValueError(f"donate must be auto|on|off, got {self.donate!r}")
+        if tuple(sorted(self.buckets)) != tuple(self.buckets) or \
+                len(self.buckets) == 0 or self.buckets[0] < 1:
+            raise ValueError(f"buckets must be ascending and ≥1: {self.buckets}")
+
+
+class _StagingRing:
+    """Per-(rows, dim) ring of reusable host staging buffers.
+
+    ``get`` hands out the least-recently-used buffer once ``slots`` exist for
+    a shape; before that it allocates (counted — the bench gates that the
+    steady-state delta is zero).
+    """
+
+    def __init__(self, slots: int):
+        self.slots = max(1, int(slots))
+        self._rings: Dict[Tuple[int, int], collections.deque] = {}
+        self.allocations = 0
+
+    def get(self, rows: int, dim: int) -> np.ndarray:
+        ring = self._rings.get((rows, dim))
+        if ring is None:        # fill the whole ring up front so steady
+            ring = collections.deque(   # state is exactly zero allocations
+                np.empty((rows, dim), np.float32)
+                for _ in range(self.slots))
+            self._rings[(rows, dim)] = ring
+            self.allocations += self.slots
+        buf = ring.popleft()
+        ring.append(buf)
+        return buf
+
+
+@dataclasses.dataclass
+class _Resident:
+    """Device-side O(D·K) serving state for one model."""
+
+    fm: Any
+    dual: jax.Array
+    proj: jax.Array
+    cents: Optional[jax.Array]
+    nbytes: int
+
+
+@dataclasses.dataclass
+class _Request:
+    ticket: int
+    model: str
+    mode: str
+    x: np.ndarray
+    out: np.ndarray
+    submitted_at: float
+    cursor: int = 0               # rows already served (oversize requests
+    completed_at: Optional[float] = None   # span several batches)
+
+
+@dataclasses.dataclass
+class Result:
+    """A finished request: output rows + timing for latency accounting."""
+
+    ticket: int
+    model: str
+    mode: str
+    values: np.ndarray
+    submitted_at: float
+    completed_at: float
+
+    @property
+    def latency(self) -> float:
+        return self.completed_at - self.submitted_at
+
+
+def _new_stats() -> Dict[str, int]:
+    return {"compiles": 0, "cache_hits": 0, "resident_hits": 0,
+            "resident_misses": 0, "evictions": 0, "rows_served": 0,
+            "batches": 0, "padded_rows": 0}
+
+
+class ClusterEngine:
+    """Long-lived multi-model serving loop; see module docstring."""
+
+    def __init__(self, config: Optional[EngineConfig] = None):
+        self.config = config or EngineConfig()
+        self._models: Dict[str, _model.SCRBModel] = {}
+        self._dims: Dict[str, int] = {}
+        self._resident: "collections.OrderedDict[str, _Resident]" = \
+            collections.OrderedDict()
+        self._cells: Dict[Tuple[str, int, str], Any] = {}
+        self._ring = _StagingRing(self.config.ring_slots)
+        self._pending: "collections.deque[_Request]" = collections.deque()
+        self._results: Dict[int, _Request] = {}
+        self._tickets = itertools.count()
+        self._model_stats: Dict[str, Dict[str, int]] = {}
+        self.total_compiles = 0
+        if self.config.donate == "auto":
+            self._donate = jax.default_backend() != "cpu"
+        else:
+            self._donate = self.config.donate == "on"
+
+    # -- model registry / LRU ---------------------------------------------
+    def load_model(self, name: str, source) -> _model.SCRBModel:
+        """Register (or hot-swap) a model under ``name``.
+
+        ``source`` is an npz artifact path (``SCRBModel.load``) or an
+        already-fitted ``SCRBModel``. Re-using a name drops the old device
+        state *and* its compiled cells — the new model's arrays may differ
+        in shape, so its cells are rebuilt on first traffic (or ``warmup``).
+        """
+        mdl = source if isinstance(source, _model.SCRBModel) \
+            else _model.SCRBModel.load(source)
+        if name in self._models:            # hot-swap
+            self._resident.pop(name, None)
+            self._dims.pop(name, None)
+            for key in [k for k in self._cells if k[0] == name]:
+                del self._cells[key]
+        self._models[name] = mdl
+        self._model_stats.setdefault(name, _new_stats())
+        return mdl
+
+    def _ensure_resident(self, name: str) -> _Resident:
+        st = self._model_stats[name]
+        res = self._resident.get(name)
+        if res is not None:
+            st["resident_hits"] += 1
+            self._resident.move_to_end(name)
+            return res
+        st["resident_misses"] += 1
+        mdl = self._models[name]
+        fm = jax.tree_util.tree_map(jnp.asarray, mdl.feature_map)
+        dual = jnp.asarray(mdl.degree_dual)
+        proj = jnp.asarray(mdl._projection)
+        cents = None if mdl.centroids is None else jnp.asarray(mdl.centroids)
+        nbytes = int(sum(leaf.nbytes for leaf in
+                         jax.tree_util.tree_leaves((fm, dual, proj, cents))))
+        res = _Resident(fm, dual, proj, cents, nbytes)
+        self._resident[name] = res
+        self._evict()
+        return res
+
+    def _evict(self) -> None:
+        """Pop least-recently-used device states until under budget; the
+        newest entry always stays (serving it is the point)."""
+        cfg = self.config
+
+        def over() -> bool:
+            if len(self._resident) > cfg.max_resident_models:
+                return True
+            if cfg.device_budget_bytes is None:
+                return False
+            return sum(r.nbytes for r in self._resident.values()) \
+                > cfg.device_budget_bytes
+
+        while len(self._resident) > 1 and over():
+            victim, _ = self._resident.popitem(last=False)
+            self._model_stats[victim]["evictions"] += 1
+
+    # -- bucketed AOT jit cache -------------------------------------------
+    def _cell(self, name: str, bucket: int, mode: str, res: _Resident,
+              dim: int):
+        key = (name, bucket, mode)
+        cell = self._cells.get(key)
+        st = self._model_stats[name]
+        if cell is not None:
+            st["cache_hits"] += 1
+            return cell
+        mdl = self._models[name]
+        xs = jax.ShapeDtypeStruct((bucket, dim), jnp.float32)
+        if mode == "predict":
+            kw = {"donate_argnums": (4,)} if self._donate else {}
+            fn = jax.jit(_model._oos_predict_impl,
+                         static_argnames=("laplacian", "impl"), **kw)
+            cell = fn.lower(res.fm, res.dual, res.proj, res.cents, xs,
+                            laplacian=mdl.laplacian_normalize,
+                            impl=self.config.impl or mdl.config.impl).compile()
+        else:
+            kw = {"donate_argnums": (3,)} if self._donate else {}
+            fn = jax.jit(_model._oos_embed_impl,
+                         static_argnames=("laplacian",), **kw)
+            cell = fn.lower(res.fm, res.dual, res.proj, xs,
+                            laplacian=mdl.laplacian_normalize).compile()
+        self._cells[key] = cell
+        st["compiles"] += 1
+        self.total_compiles += 1
+        return cell
+
+    def warmup(self, name: str, *, dim: Optional[int] = None,
+               modes: Tuple[str, ...] = ("predict",)) -> int:
+        """Precompile every bucket cell for ``name`` so first-request latency
+        is pure execution. Returns the number of cells compiled now."""
+        mdl = self._models[name]
+        dim = dim or mdl.data_dim or self._dims.get(name)
+        if dim is None:
+            raise ValueError(
+                f"cannot infer data_dim for {name!r}; pass warmup(dim=...)")
+        res = self._ensure_resident(name)
+        before = self.total_compiles
+        for mode in modes:
+            if mode == "predict" and mdl.centroids is None:
+                continue
+            for bucket in self.config.buckets:
+                self._cell(name, bucket, mode, res, dim)
+                self._ring.get(bucket, dim)     # pre-fill staging rings too
+        return self.total_compiles - before
+
+    # -- request loop ------------------------------------------------------
+    def submit(self, name: str, x, mode: str = "predict") -> int:
+        """Enqueue rows for ``name``; returns a ticket for ``take``."""
+        if name not in self._models:
+            raise KeyError(f"unknown model {name!r}; load_model() first")
+        if mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+        mdl = self._models[name]
+        if mode == "predict" and mdl.centroids is None:
+            raise ValueError(f"model {name!r} has no centroids; "
+                             "use mode='transform'")
+        x = np.ascontiguousarray(np.asarray(x, np.float32))
+        if x.ndim != 2:
+            raise ValueError(f"expected (n, d) rows, got shape {x.shape}")
+        expect = mdl.data_dim or self._dims.get(name)
+        if expect is not None and x.shape[1] != expect:
+            raise ValueError(f"model {name!r} expects {expect}-d rows, "
+                             f"got {x.shape[1]}-d")
+        self._dims.setdefault(name, x.shape[1])
+        k = mdl.right_vectors.shape[1]
+        out = np.empty((x.shape[0],), np.int32) if mode == "predict" \
+            else np.empty((x.shape[0], k), np.float32)
+        req = _Request(ticket=next(self._tickets), model=name, mode=mode,
+                       x=x, out=out, submitted_at=time.perf_counter())
+        if x.shape[0] == 0:                 # nothing to do on device
+            req.completed_at = req.submitted_at
+            self._results[req.ticket] = req
+        else:
+            self._pending.append(req)
+        return req.ticket
+
+    def step(self) -> int:
+        """Serve one coalesced device batch for the oldest pending
+        (model, mode) group; returns rows served (0 when idle)."""
+        if not self._pending:
+            return 0
+        head = self._pending[0]
+        name, mode = head.model, head.mode
+        cap = self.config.max_batch_rows or self.config.buckets[-1]
+        take: List[Tuple[_Request, int]] = []
+        total = 0
+        for req in self._pending:
+            if req.model != name or req.mode != mode:
+                continue
+            if total >= cap:
+                break
+            n = min(req.x.shape[0] - req.cursor, cap - total)
+            take.append((req, n))
+            total += n
+        bucket = _model.round_to_bucket(total, self.config.buckets)
+        dim = take[0][0].x.shape[1]
+        res = self._ensure_resident(name)
+        cell = self._cell(name, bucket, mode, res, dim)
+        buf = self._ring.get(bucket, dim)
+        off = 0
+        for req, n in take:
+            buf[off:off + n] = req.x[req.cursor:req.cursor + n]
+            off += n
+        buf[off:] = 0.0                     # mask: pad rows are zeros and
+        xdev = jax.device_put(buf)          # get sliced off below
+        if mode == "predict":
+            out = cell(res.fm, res.dual, res.proj, res.cents, xdev)
+        else:
+            out = cell(res.fm, res.dual, res.proj, xdev)
+        out = np.asarray(out)
+        done_at = time.perf_counter()
+        off = 0
+        for req, n in take:
+            req.out[req.cursor:req.cursor + n] = out[off:off + n]
+            req.cursor += n
+            off += n
+            if req.cursor == req.x.shape[0]:
+                req.completed_at = done_at
+                self._results[req.ticket] = req
+                self._pending.remove(req)
+        st = self._model_stats[name]
+        st["rows_served"] += total
+        st["batches"] += 1
+        st["padded_rows"] += bucket - total
+        return total
+
+    def drain(self) -> int:
+        """Run ``step`` until the queue is empty; returns rows served."""
+        total = 0
+        while self._pending:
+            total += self.step()
+        return total
+
+    def take(self, ticket: int) -> Result:
+        """Collect a finished ticket (once); KeyError if unknown/unfinished."""
+        req = self._results.pop(ticket, None)
+        if req is None:
+            raise KeyError(f"ticket {ticket} is not finished (or was already "
+                           "taken); call step()/drain() first")
+        return Result(ticket=req.ticket, model=req.model, mode=req.mode,
+                      values=req.out, submitted_at=req.submitted_at,
+                      completed_at=req.completed_at)
+
+    # -- sync convenience --------------------------------------------------
+    def predict(self, name: str, x) -> np.ndarray:
+        t = self.submit(name, x, "predict")
+        self.drain()
+        return self.take(t).values
+
+    def transform(self, name: str, x) -> np.ndarray:
+        t = self.submit(name, x, "transform")
+        self.drain()
+        return self.take(t).values
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def models(self) -> Tuple[str, ...]:
+        return tuple(self._models)
+
+    @property
+    def resident_models(self) -> Tuple[str, ...]:
+        return tuple(self._resident)
+
+    def stats(self, name: Optional[str] = None) -> Dict[str, Any]:
+        if name is not None:
+            return dict(self._model_stats[name])
+        per = {k: dict(v) for k, v in self._model_stats.items()}
+        return {
+            "models": per,
+            "total_compiles": self.total_compiles,
+            "cells": len(self._cells),
+            "resident": list(self._resident),
+            "resident_bytes": sum(r.nbytes for r in self._resident.values()),
+            "staging_allocations": self._ring.allocations,
+            "pending": len(self._pending),
+            "rows_served": sum(s["rows_served"] for s in per.values()),
+            "batches": sum(s["batches"] for s in per.values()),
+            "padded_rows": sum(s["padded_rows"] for s in per.values()),
+            "evictions": sum(s["evictions"] for s in per.values()),
+        }

@@ -1,13 +1,19 @@
 """Fitted-model API: out-of-sample consistency, serialization, and the
 O(D·K)-state guarantee of ``repro.core.model.SCRBModel``."""
 
+import json
+import os
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import SCRBConfig, SCRBModel, metrics, sc_rb
 from repro.core.executor import ExecutionPlan
+from repro.core.model import BUCKET_GRID, round_to_bucket
 from repro.data.synthetic import make_blobs
+
+DATA_DIR = os.path.join(os.path.dirname(__file__), "data")
 
 # d_g pinned so the fitted state is shape-identical across fit sizes (the
 # auto-probe would otherwise pick data-dependent hash widths)
@@ -108,6 +114,69 @@ def test_fit_accepts_explicit_plans(blobs):
     np.testing.assert_array_equal(via_plan.fit_result.labels,
                                   via_cfg.fit_result.labels)
     np.testing.assert_array_equal(via_plan.predict(x), via_cfg.predict(x))
+
+
+def test_round_to_bucket_grid():
+    assert round_to_bucket(1) == BUCKET_GRID[0]
+    for b in BUCKET_GRID:
+        assert round_to_bucket(b) == b          # exact sizes stay put
+        assert round_to_bucket(b - 1) == b
+    top = BUCKET_GRID[-1]
+    assert round_to_bucket(top + 1) == 2 * top  # above the grid: top-multiples
+    assert round_to_bucket(3 * top - 1) == 3 * top
+    # multiple_of lifts for mesh sharding
+    assert round_to_bucket(100, multiple_of=3) % 3 == 0
+    assert round_to_bucket(100, multiple_of=3) >= round_to_bucket(100)
+    with pytest.raises(ValueError):
+        round_to_bucket(0)
+
+
+def test_bucket_padded_predict_bit_identical(blobs):
+    """The serving satellite: any ``batch_size`` is rounded to the bucket
+    grid and chunks are zero-padded to their bucket — every OOS op is
+    row-local, so labels AND embeddings must be *bit*-identical to the
+    unpadded exact-shape path, ragged tail included."""
+    x, _ = blobs
+    model = SCRBModel.fit(x, SCRBConfig(**BASE))
+    want = model.predict(x)                       # legacy unpadded path
+    want_emb = model.transform(x)
+    for bs in (64, 100, 300, 799):                # off-grid sizes round up
+        np.testing.assert_array_equal(model.predict(x, batch_size=bs), want)
+    np.testing.assert_array_equal(model.transform(x, batch_size=100),
+                                  want_emb)
+    # ragged single chunk smaller than any bucket
+    np.testing.assert_array_equal(model.predict(x[:17], batch_size=64),
+                                  want[:17])
+
+
+def test_load_v1_artifact_compat():
+    """A checked-in format_version=1 (int-stamped) artifact keeps loading
+    and reproduces its recorded labels — guards the artifact contract
+    across format minors and the CI jax-version matrix."""
+    model = SCRBModel.load(os.path.join(DATA_DIR, "tiny_model_v1.npz"))
+    xq = np.load(os.path.join(DATA_DIR, "tiny_model_v1_x.npy"))
+    want = np.load(os.path.join(DATA_DIR, "tiny_model_v1_labels.npy"))
+    np.testing.assert_array_equal(model.predict(xq), want)
+    assert model.data_dim == xq.shape[1]
+
+
+def test_load_rejects_unknown_major(blobs, tmp_path):
+    x, _ = blobs
+    model = SCRBModel.fit(x[:400], SCRBConfig(**BASE))
+    path = str(tmp_path / "m.npz")
+    model.save(path)
+    with np.load(path, allow_pickle=False) as npz:
+        arrays = {k: npz[k] for k in npz.files}
+    meta = json.loads(bytes(arrays["_meta"].tobytes()).decode("utf-8"))
+    assert meta["format_version"].startswith("1.")   # current stamp
+    assert meta["data_dim"] == x.shape[1]
+    meta["format_version"] = "2.0"
+    arrays["_meta"] = np.frombuffer(json.dumps(meta).encode("utf-8"),
+                                    np.uint8)
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+    with pytest.raises(ValueError, match="format_version='2.0'"):
+        SCRBModel.load(path)
 
 
 def test_dense_feature_map_model_roundtrip(blobs, tmp_path):
