@@ -283,6 +283,93 @@ def gate_compressive(cout: dict) -> list[str]:
     return failures
 
 
+def run_partitioned(n: int = 32_000, n_partitions: int = 4, rank: int = 128,
+                    seed: int = 0) -> dict:
+    """Divide-and-conquer cell for the bench-smoke gate
+    (``placement="partitioned"``, ``repro.core.partitioned``).
+
+    The partitioned fit must reproduce the single-shot LOBPCG labels
+    (ARI ≥ 0.90) at equal N with a fit wall-clock *strictly below* the
+    global solve's. Per-partition fits use the randomized sketch solver —
+    that is the point of the divide-and-conquer design: each partition's
+    spectrum is immediately summarized to ``local_clusters`` centroid
+    representatives, so a cheap local solve suffices and the merge (one
+    (P·K, P·K) eigenproblem + weighted k-means) restores the global
+    partition. Both sides pay one untimed cold pass first so the timed
+    comparison measures the fit, not jit compilation, on either path.
+    """
+    import time
+
+    from repro.core import PartitionOptions, SolverOptions, executor
+    from repro.data.synthetic import make_blobs
+
+    x, y = make_blobs(n, 10, 4, seed=seed)
+    base = dict(n_clusters=4, n_grids=rank, sigma=1.0, d_g=2048,
+                kmeans_replicates=4, seed=seed)
+    lob = SCRBConfig(**base, solver_options=SolverOptions(solver="lobpcg"))
+    part = SCRBConfig(
+        **base, solver_options=SolverOptions(solver="randomized"),
+        partition=PartitionOptions(n_partitions=n_partitions))
+
+    executor.execute(x, lob, keep_embedding=False)        # compile (global)
+    executor.execute(x, part, keep_embedding=False)       # compile (parts)
+    t0 = time.perf_counter()
+    ref = executor.execute(x, lob, keep_embedding=False)
+    global_wall = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = executor.execute(x, part, keep_embedding=False)
+    part_wall = time.perf_counter() - t0
+
+    pd = res.diagnostics["partitioned"]
+    out = {
+        "n": n,
+        "n_partitions": pd["n_partitions"],
+        "workers": pd["workers"],
+        "devices": pd["devices"],
+        "rank": rank,
+        "partition_solver": "randomized",
+        "reference_solver": "lobpcg",
+        "ari_vs_lobpcg": metrics.adjusted_rand_index(res.labels, ref.labels),
+        "ari_truth_lobpcg": metrics.adjusted_rand_index(ref.labels, y),
+        "ari_truth_partitioned": metrics.adjusted_rand_index(res.labels, y),
+        "global_total_s": global_wall,
+        "partitioned_total_s": part_wall,
+        "speedup": global_wall / max(part_wall, 1e-9),
+        "global_stages": dict(ref.timer.times),
+        "partitioned_stages": dict(res.timer.times),
+        "partition_rows": pd["partition_rows"],
+        "partition_fit_s": pd["partition_fit_s"],
+        "partition_stage_s": pd["partition_stage_s"],
+        "merge_s": res.timer.times.get("merge", 0.0),
+        "label_pass_s": res.timer.times.get("kmeans", 0.0),
+        "representatives": pd["representatives"],
+        "merge_singular_values": pd["merge_singular_values"],
+    }
+    print(f"[fig6] partitioned (P={n_partitions}, N={n}): "
+          f"{part_wall:.2f}s vs global LOBPCG {global_wall:.2f}s "
+          f"({out['speedup']:.2f}x), ARI vs LOBPCG "
+          f"{out['ari_vs_lobpcg']:.3f}")
+    return out
+
+
+def gate_partitioned(pout: dict) -> list[str]:
+    """CI conditions for the partitioned cell: label parity with the
+    single-shot LOBPCG solve and a fit wall-clock strictly below it."""
+    failures = []
+    if pout["ari_vs_lobpcg"] < 0.90:
+        failures.append(
+            f"partitioned vs single-shot LOBPCG label ARI "
+            f"{pout['ari_vs_lobpcg']:.3f} < 0.90 — the merge no longer "
+            f"reproduces the global partition")
+    if not pout["partitioned_total_s"] < pout["global_total_s"]:
+        failures.append(
+            f"partitioned fit wall-clock {pout['partitioned_total_s']:.2f}s "
+            f"is not strictly below the global solve "
+            f"{pout['global_total_s']:.2f}s at N={pout['n']} — the "
+            f"divide-and-conquer path lost its timing advantage")
+    return failures
+
+
 _MESH_CHILD = r"""
 import os, sys, json
 params = json.loads(sys.argv[1])
@@ -447,6 +534,16 @@ def main() -> None:
     ap.add_argument("--compressive-degree", type=int, default=48,
                     help="pinned Chebyshev filter degree for the gate cell "
                          "(bounds the mat-vec budget in CI)")
+    ap.add_argument("--partitioned-gate", action="store_true",
+                    help="also run the divide-and-conquer partitioned fit "
+                         "and gate its LOBPCG label parity + wall-clock win "
+                         "at equal N")
+    ap.add_argument("--partitioned-n", type=int, default=32_000)
+    ap.add_argument("--partitioned-parts", type=int, default=4)
+    ap.add_argument("--partitioned-out",
+                    default="bench_results/BENCH_PR9.json",
+                    help="where the partitioned cell's JSON is written "
+                         "(committed as the PR-9 bench record)")
     args = ap.parse_args()
     ns = [n for n in (1_000, 2_000, 4_000, 8_000, 16_000, 32_000, 64_000)
           if n <= args.max_n]
@@ -464,6 +561,18 @@ def main() -> None:
         res["mesh"] = run_mesh(n=args.mesh_n, chunk=args.mesh_chunk,
                                rank=args.rank, devices=args.mesh_devices)
         failures += gate_mesh(res["mesh"])
+    if args.partitioned_gate:
+        pout = run_partitioned(n=args.partitioned_n,
+                               n_partitions=args.partitioned_parts,
+                               rank=args.rank)
+        pfail = gate_partitioned(pout)
+        pout["gate_failures"] = pfail
+        failures += pfail
+        res["partitioned"] = pout
+        if os.path.dirname(args.partitioned_out):
+            os.makedirs(os.path.dirname(args.partitioned_out), exist_ok=True)
+        with open(args.partitioned_out, "w") as f:
+            json.dump(pout, f, indent=1)
     res["gate_failures"] = failures
     with open(args.out, "w") as f:
         json.dump(res, f, indent=1)

@@ -34,14 +34,18 @@ from repro.core.kmeans import (  # noqa: F401
     row_normalize_chunks, streaming_kmeans,
 )
 from repro.core.executor import (  # noqa: F401
-    ExecutionPlan, execute, plan_from_config,
+    ExecutionPlan, FitResult, execute, plan_from_config,
+)
+from repro.core.options import (  # noqa: F401
+    CompressiveOptions, PartitionOptions, SolverOptions,
 )
 from repro.core.featuremap import (  # noqa: F401
     FEATURE_MAPS, FeatureMap, LSCMap, NystromMap, RBMap, RFFMap,
     make_feature_map,
 )
 from repro.core.rowmatrix import (  # noqa: F401
-    DeviceRows, FittedFeatures, HostChunkedRows, MeshRows, RowMatrix,
+    DeviceRows, FittedFeatures, HostChunkedRows, MeshRows, PartitionedRows,
+    RowMatrix,
 )
 from repro.core.model import SCRBModel  # noqa: F401
 from repro.core.pipeline import (  # noqa: F401

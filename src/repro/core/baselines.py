@@ -148,7 +148,10 @@ def csc_rb_baseline(x: jax.Array, cfg: BaselineConfig) -> BaselineResult:
     et al.'s compressive SC over the same RB graph — Chebyshev-filtered
     random signals + random-subset k-means, ``repro.core.compressive``).
     Same executor, same keys; only ``solver`` differs from ``sc_rb``."""
-    scfg = dataclasses.replace(_scrb_config(cfg), solver="compressive")
+    base = _scrb_config(cfg)
+    scfg = dataclasses.replace(
+        base, solver_options=dataclasses.replace(base.solver_options,
+                                                 solver="compressive"))
     res = executor.execute(x, scfg)
     return BaselineResult(res.labels, res.timer)
 

@@ -262,8 +262,8 @@ def compressive_embed(z, k: int, key, cfg, *,
     """The eigendecomposition-free spectral embedding (steps 1–2 + 4 of the
     module docstring); ``subset_cluster`` is step 3.
 
-    ``cfg`` knobs: ``compressive_probes`` / ``compressive_degree`` /
-    ``compressive_signals`` (None → gap- and K-derived defaults). The
+    ``cfg`` knobs: ``CompressiveOptions.probes`` / ``.degree`` /
+    ``.signals`` (None → gap- and K-derived defaults). The
     working set is three d-wide tall blocks in the representation's native
     residency — no (N, K) iterate exists at any point.
     """
@@ -272,20 +272,21 @@ def compressive_embed(z, k: int, key, cfg, *,
             "solver='compressive' requires laplacian_normalize=True: the "
             "Chebyshev filter maps spec(Â) onto [-1, 1] via y = 2λ - 1, "
             "which needs the degree normalization's λ ∈ [0, 1]")
-    if cfg.compressive_lambdas is not None:
+    co = cfg.compressive_options
+    if co.lambdas is not None:
         # warm start: a caller-supplied (λ_K, λ_{K+1}) bracket (typically a
         # previous fit on the same distribution — the spectrum of Â is
         # N-stable) replaces the eigencount sweep outright
-        lam_k, lam_k1 = (float(v) for v in cfg.compressive_lambdas)
+        lam_k, lam_k1 = (float(v) for v in co.lambdas)
         est = LambdaEstimate(
             lambda_k=lam_k, lambda_k1=lam_k1,
             cutoff=0.5 * (lam_k + lam_k1), moments=None, probes=0, degree=0)
         nmv_count = 0
     else:
         est, nmv_count = estimate_lambda_k(
-            z, k, fold_key(key, "count"), probes=cfg.compressive_probes)
-    degree = cfg.compressive_degree or default_filter_degree(est)
-    d = min(cfg.compressive_signals or default_signals(k), z.n)
+            z, k, fold_key(key, "count"), probes=co.probes)
+    degree = co.degree or default_filter_degree(est)
+    d = min(co.signals or default_signals(k), z.n)
     coeffs = step_coeffs(est.cutoff, degree)
     r = z.random_tall(fold_key(key, "signals"), d)
     s, _, nmv_filter = chebyshev_sweep(z, r, degree, coeffs=coeffs)
@@ -341,7 +342,7 @@ def subset_cluster(z, u_hat, key, cfg) -> Tuple[KMeansResult, dict]:
     representation keeps its residency guarantees (prefetched host chunks /
     row-sharded shards); only the (N, 2) label/distance table leaves."""
     n, k = z.n, cfg.n_clusters
-    n_sub = int(min(n, max(k, cfg.compressive_subset
+    n_sub = int(min(n, max(k, cfg.compressive_options.subset
                            or default_subset(n, k))))
     seed = int(jax.random.randint(fold_key(key, "subset"), (), 0,
                                   np.iinfo(np.int32).max))

@@ -44,65 +44,55 @@ k-means statistics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping, Optional, Tuple
+import warnings
+from typing import Any, Mapping, Optional
 
 import jax
 import numpy as np
 
 from repro.core import compressive, featuremap, rowmatrix, streaming
 from repro.core.kmeans import row_normalize
+from repro.core.options import (
+    UNSET, CompressiveOptions, PartitionOptions, SolverOptions,
+    normalize_config,
+)
 from repro.kernels import ops
 from repro.utils import StageTimer, fold_key
+
+# flat fields kept as deprecated shims; everything typed Any so the UNSET
+# sentinel can flow through (see repro.core.options.normalize_config)
+_Flat = Any
 
 
 @dataclasses.dataclass(frozen=True)
 class SCRBConfig:
+    """Run configuration. Solver/compressive/partition knobs live in typed
+    groups (``repro.core.options``); the historical flat ``solver_*`` /
+    ``compressive_*`` kwargs still work as deprecated shims — they fold into
+    the groups with a ``DeprecationWarning`` and the flat attributes always
+    mirror the canonical group values, so old call sites and artifact
+    configs keep loading unchanged."""
+
     n_clusters: int
     n_grids: int = 256            # R
     sigma: float = 1.0            # Laplacian kernel bandwidth
     d_g: Optional[int] = None     # hashed features per grid (power of 2);
                                   # None → auto-size from occupied-bin probe
-    solver: str = "lobpcg"        # lobpcg | lobpcg_host | lanczos | subspace
-                                  # | randomized | auto (sketch, then a
-                                  # warm-started LOBPCG continuation only if
-                                  # the sketch misses solver_tol)
-                                  # | compressive (eigendecomposition-free
-                                  # Chebyshev filtering, repro.core.
-                                  # compressive — no (N, K) iterate; "auto"
-                                  # also routes here above compressive_auto_n
-                                  # rows)
-    solver_iters: int = 300
-    solver_tol: float = 1e-4
-    solver_buffer: int = 4
-    solver_precond: str = "degree"
-    # ^ "degree" applies the diagonal (Jacobi-on-L̂) preconditioner built
-    #   from the RB degrees inside the LOBPCG residual block (see
-    #   eigensolver.degree_precond); "none" disables. Ignored by the
-    #   lanczos/subspace study solvers.
-    solver_stable_tol: Optional[float] = None
-    # ^ adaptive stop: end the eigensolve once the leading-k Ritz subspace
-    #   moves by less than this between checkpoints (the embedding is
-    #   k-means-stable) instead of waiting for tiny residuals. None keeps
-    #   the pure residual stop; solver="auto" defaults it to 1e-3.
-    compressive_signals: Optional[int] = None
-    # ^ d: filtered random signals for solver="compressive" (the embedding
-    #   width). None → O(log K) default (compressive.default_signals).
-    compressive_degree: Optional[int] = None
-    # ^ Chebyshev filter degree (Gram mat-vecs in the filtering sweep).
-    #   None → derived from the estimated λ_K / λ_{K+1} gap.
-    compressive_probes: int = 32
-    # ^ Rademacher probe vectors behind the eigencount trace estimates
-    #   (wider block, same mat-vec count — see compressive.COUNT_PROBES).
-    compressive_subset: Optional[int] = None
-    # ^ rows sampled for the compressive k-means; None → O(K log K) default.
-    compressive_lambdas: Optional[Tuple[float, float]] = None
-    # ^ warm start: a known (λ_K, λ_{K+1}) bracket — e.g. a previous fit on
-    #   the same distribution, as fig4's N-sweep does — skips the eigencount
-    #   sweep entirely, leaving only the filter's fixed mat-vec budget.
-    compressive_auto_n: Optional[int] = 1_000_000
-    # ^ solver="auto" prefers compressive at n ≥ this threshold (where the
-    #   dense (N, K+buffer) LOBPCG iterate dominates); None disables the
-    #   auto routing.
+    # -- deprecated flat shims (fold into solver_options) -------------------
+    solver: _Flat = UNSET         # → SolverOptions.solver
+    solver_iters: _Flat = UNSET   # → SolverOptions.iters
+    solver_tol: _Flat = UNSET     # → SolverOptions.tol
+    solver_buffer: _Flat = UNSET  # → SolverOptions.buffer
+    solver_precond: _Flat = UNSET          # → SolverOptions.precond
+    solver_stable_tol: _Flat = UNSET       # → SolverOptions.stable_tol
+    # -- deprecated flat shims (fold into compressive_options) --------------
+    compressive_signals: _Flat = UNSET     # → CompressiveOptions.signals
+    compressive_degree: _Flat = UNSET      # → CompressiveOptions.degree
+    compressive_probes: _Flat = UNSET      # → CompressiveOptions.probes
+    compressive_subset: _Flat = UNSET      # → CompressiveOptions.subset
+    compressive_lambdas: _Flat = UNSET     # → CompressiveOptions.lambdas
+    compressive_auto_n: _Flat = UNSET      # → CompressiveOptions.auto_n
+    # -----------------------------------------------------------------------
     kmeans_iters: int = 25
     kmeans_replicates: int = 10
     seed: int = 0
@@ -112,8 +102,10 @@ class SCRBConfig:
     #   to the pre-streaming pipeline on a single device); an int selects
     #   residency="host_chunked": on a single device every stage streams
     #   host-resident row chunks (peak device residency O(chunk·(R+K)),
-    #   requires solver="lobpcg"); on a mesh it bounds every within-shard
-    #   sweep (Gram mat-vec and k-means stats) to O(chunk) working sets.
+    #   requires a host-driven solver); on a mesh it bounds every
+    #   within-shard sweep (Gram mat-vec and k-means stats) to O(chunk)
+    #   working sets; under placement="partitioned" each partition streams
+    #   its own chunks.
     prefetch: bool = True
     # ^ double-buffer H2D chunk uploads on the streaming path: the transfer
     #   of chunk i+1 is issued before the chunk-i compute (bitwise-identical
@@ -122,10 +114,57 @@ class SCRBConfig:
     # ^ per-op Pallas row-tile caps (keys of ops.DEFAULT_BLOCK_ROWS, e.g.
     #   {"ell_spmm": 256}); None keeps the defaults. Applied to every kernel
     #   dispatch of the run via ops.block_rows_overrides.
+    # -- typed option groups (canonical; see repro.core.options) ------------
+    solver_options: Optional[SolverOptions] = None
+    # ^ None → SolverOptions() defaults (or the deprecated flat kwargs).
+    compressive_options: Optional[CompressiveOptions] = None
+    # ^ None → CompressiveOptions() defaults (or the flat kwargs).
+    partition: Optional[PartitionOptions] = None
+    # ^ a PartitionOptions selects the divide-and-conquer
+    #   placement="partitioned" fit (repro.core.partitioned); None keeps the
+    #   single global solve.
+
+    def __post_init__(self):
+        normalize_config(self)
+
+    # -- artifact round-trip ------------------------------------------------
+    def to_dict(self) -> dict:
+        """JSON-ready config dict in the *flat* spelling (plus a nested
+        ``partition`` entry when set) — same-major artifacts written by this
+        build stay readable by older same-major builds, whose loaders only
+        know the flat keys."""
+        d = {}
+        for f in dataclasses.fields(self):
+            if f.name in ("solver_options", "compressive_options",
+                          "partition"):
+                continue
+            d[f.name] = getattr(self, f.name)
+        if d.get("block_rows") is not None:
+            d["block_rows"] = dict(d["block_rows"])
+        if d.get("compressive_lambdas") is not None:
+            d["compressive_lambdas"] = list(d["compressive_lambdas"])
+        if self.partition is not None:
+            d["partition"] = dataclasses.asdict(self.partition)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "SCRBConfig":
+        """Rebuild from ``to_dict`` output (or a pre-grouping artifact
+        config, which is flat-only). Flat keys here are round-trip data, not
+        user calls, so the deprecation warning is suppressed."""
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            return cls(**dict(d))
 
 
 @dataclasses.dataclass
-class SCRBResult:
+class FitResult:
+    """The typed result of one executor run — returned by ``execute`` and
+    threaded through ``SCRBModel.fit`` (as ``model.fit_result``) and the
+    ``sc_rb`` / ``spectral_embed`` wrappers. Unpacks as the historical
+    ``(embedding, singular_values)`` pair for legacy ``spectral_embed``
+    call sites."""
+
     labels: Optional[np.ndarray]  # (N,) int32; None when stages stop early
     embedding: np.ndarray         # (N, K) row-normalized spectral embedding
     singular_values: np.ndarray   # (K,) of Ẑ  (σ_i = sqrt(eigval of ẐẐᵀ))
@@ -135,6 +174,19 @@ class SCRBResult:
     # True)``): the RowMatrix ``z``, fitted ``features``, raw ``eig`` pairs,
     # ``u_hat`` and ``km`` — what ``SCRBModel.fit`` turns into a deployable
     # artifact. None by default so one-shot runs don't pin O(N) state.
+
+    def __iter__(self):
+        yield self.embedding
+        yield self.singular_values
+
+    @property
+    def timings(self) -> dict:
+        """Per-stage wall-clock seconds (``timer.times`` view)."""
+        return self.timer.times
+
+
+#: Deprecated alias — the result type was renamed to :class:`FitResult`.
+SCRBResult = FitResult
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,15 +218,16 @@ class ExecutionPlan:
     # solver at iteration 0. See eigensolver.prepare_start_block.
 
     def __post_init__(self):
-        if self.placement not in ("single", "mesh"):
+        if self.placement not in ("single", "mesh", "partitioned"):
             raise ValueError(f"unknown placement {self.placement!r}")
         if self.residency not in ("device", "host_chunked"):
             raise ValueError(f"unknown residency {self.residency!r}")
         if self.placement == "mesh" and self.mesh is None:
             raise ValueError("placement='mesh' requires a mesh")
         if self.placement == "single" and self.mesh is not None:
+            # partitioned MAY carry a mesh: one partition per mesh-axis shard
             raise ValueError("placement='single' must not carry a mesh")
-        if (self.residency == "host_chunked" and self.placement == "single"
+        if (self.residency == "host_chunked" and self.placement != "mesh"
                 and self.chunk_size is None):
             raise ValueError("residency='host_chunked' requires chunk_size")
 
@@ -184,26 +237,37 @@ _REPRESENTATIONS = {
     ("single", "host_chunked"): rowmatrix.HostChunkedRows,
     ("mesh", "device"): rowmatrix.MeshRows,
     ("mesh", "host_chunked"): rowmatrix.MeshRows,
+    # the divide-and-conquer fit: per-partition single-placement sub-fits
+    # (each its own DeviceRows/HostChunkedRows) under one shared feature map
+    ("partitioned", "device"): rowmatrix.PartitionedRows,
+    ("partitioned", "host_chunked"): rowmatrix.PartitionedRows,
 }
 
 
 def plan_from_config(config: SCRBConfig, mesh=None) -> ExecutionPlan:
     """The config → plan mapping behind the three public entry points."""
+    so = config.solver_options
     if config.chunk_size is not None and mesh is None \
-            and config.solver not in ("lobpcg", "lobpcg_host", "randomized",
-                                      "auto", "compressive"):
+            and so.solver not in ("lobpcg", "lobpcg_host", "randomized",
+                                  "auto", "compressive"):
         raise ValueError(
             f"chunk_size streaming requires a host-driven solver "
             f"('lobpcg', 'lobpcg_host', 'randomized', 'auto' or "
-            f"'compressive'), got {config.solver!r}")
+            f"'compressive'), got {so.solver!r}")
+    part = config.partition
+    placement = "single"
+    if part is not None and part.n_partitions > 1:
+        placement = "partitioned"
+    elif mesh is not None:
+        placement = "mesh"
     return ExecutionPlan(
-        placement="mesh" if mesh is not None else "single",
+        placement=placement,
         residency="host_chunked" if config.chunk_size is not None
         else "device",
         chunk_size=config.chunk_size,
         prefetch=config.prefetch,
         impl=config.impl,
-        mesh=mesh,
+        mesh=mesh if placement != "single" else None,
         block_rows=config.block_rows,
     )
 
@@ -218,12 +282,12 @@ def effective_solver(config: SCRBConfig, n: int) -> str:
     eigendecomposition-free compressive cell once the dense (N, K+buffer)
     iterate would dominate (n ≥ ``compressive_auto_n``); everything else is
     taken literally. Exposed so benchmarks/tests can predict the routing."""
-    if config.solver == "compressive":
+    so, co = config.solver_options, config.compressive_options
+    if so.solver == "compressive":
         return "compressive"
-    if (config.solver == "auto" and config.compressive_auto_n is not None
-            and n >= config.compressive_auto_n):
+    if (so.solver == "auto" and co.auto_n is not None and n >= co.auto_n):
         return "compressive"
-    return config.solver
+    return so.solver
 
 
 def execute(
@@ -234,7 +298,7 @@ def execute(
     final_stage: str = "kmeans",
     keep_embedding: bool = True,
     keep_state: bool = False,
-) -> SCRBResult:
+) -> FitResult:
     """Run Algorithm 2 under a plan; every entry point goes through here.
 
     ``final_stage="normalize"`` stops after stage 4 (the ``spectral_embed``
@@ -252,6 +316,12 @@ def execute(
         plan = plan_from_config(cfg)
     if final_stage not in ("normalize", "kmeans"):
         raise ValueError(f"unknown final_stage {final_stage!r}")
+    if plan.placement == "partitioned":
+        # lazy import: partitioned re-enters execute() per partition
+        from repro.core import partitioned
+        return partitioned.execute_partitioned(
+            x, cfg, plan, final_stage=final_stage,
+            keep_embedding=keep_embedding, keep_state=keep_state)
     rep_cls = _REPRESENTATIONS[(plan.placement, plan.residency)]
     fm = plan.feature_map
     if fm is None:
@@ -316,8 +386,8 @@ def execute(
                  "impl": plan.impl},
         "feature_map": fitted.name,
         "solver": solver,
-        "solver_requested": cfg.solver,
-        "solver_precond": cfg.solver_precond,
+        "solver_requested": cfg.solver_options.solver,
+        "solver_precond": cfg.solver_options.precond,
         "solver_warm_start": plan.eig_x0 is not None,
         "solver_iterations": int(iterations),
         "solver_resnorms": np.asarray(resnorms),
@@ -354,7 +424,7 @@ def execute(
         state = {"z": z, "features": feats, "eig": eig, "u_hat": u_hat,
                  "km": km, "plan": plan,
                  "oos_proj": None if comp is None else comp.proj}
-    return SCRBResult(
+    return FitResult(
         labels=None if km is None else np.asarray(km.labels),
         embedding=embedding,
         singular_values=sigmas,

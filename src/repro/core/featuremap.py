@@ -104,6 +104,8 @@ class RBMap:
     def fit(self, key: jax.Array, x) -> "RBMap":
         # Identical key folding to the pre-protocol pipeline, so fitted-map
         # runs stay bit-identical to the seed single-shot path.
+        if self.params is not None:
+            return self       # already fitted (shared across partitioned fits)
         d_g = self.d_g or rb.suggest_d_g(x, self.sigma,
                                          key=fold_key(key, "probe"))
         params = rb.make_rb_params(fold_key(key, "rb"), self.n_grids,
@@ -193,6 +195,8 @@ class RFFMap(_DenseOOS):
     params: Optional[rff.RFFParams] = None
 
     def fit(self, key: jax.Array, x) -> "RFFMap":
+        if self.params is not None:
+            return self       # already fitted (shared across partitioned fits)
         params = rff.make_rff_params(fold_key(key, "rff"), self.rank,
                                      _data_dim(x), self.sigma,
                                      kernel=self.kernel)
@@ -248,6 +252,8 @@ class NystromMap(_DenseOOS):
     whiten: Optional[jax.Array] = None       # (m, m) = V Λ^{-1/2} Vᵀ
 
     def fit(self, key: jax.Array, x, eps: float = 1e-6) -> "NystromMap":
+        if self.landmarks is not None:
+            return self       # already fitted (shared across partitioned fits)
         chunks = _chunk_list(x)
         n = sum(int(c.shape[0]) for c in chunks)
         m = max(1, min(self.rank, n // 2))
@@ -314,6 +320,8 @@ class LSCMap(_DenseOOS):
 
     def fit(self, key: jax.Array, x, n_refine: int = 3,
             max_sample: int = 8192) -> "LSCMap":
+        if self.anchors is not None:
+            return self       # already fitted (shared across partitioned fits)
         chunks = _chunk_list(x)
         n = sum(int(c.shape[0]) for c in chunks)
         p = max(1, min(self.rank, n // 2))

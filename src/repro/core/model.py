@@ -108,7 +108,7 @@ class SCRBModel:
     centroids: Optional[np.ndarray]     # (n_clusters, K); None if fit
                                         # stopped before the k-means stage
     laplacian_normalize: bool = True
-    fit_result: Optional[_executor.SCRBResult] = None   # train-run result
+    fit_result: Optional[_executor.FitResult] = None   # train-run result
     # (labels/embedding/timings); not serialized — the artifact stays O(D·K)
 
     # -- fitting -----------------------------------------------------------
@@ -118,6 +118,7 @@ class SCRBModel:
         x,
         config: _executor.SCRBConfig,
         *,
+        k: "Optional[int | str]" = None,
         mesh=None,
         plan: Optional[_executor.ExecutionPlan] = None,
         final_stage: str = "kmeans",
@@ -127,8 +128,13 @@ class SCRBModel:
         """Run Algorithm 2 under any plan and keep the out-of-sample state.
 
         ``mesh`` / ``plan`` select placement and residency exactly as for
-        ``executor.execute``; the train-run ``SCRBResult`` rides along as
+        ``executor.execute``; the train-run ``FitResult`` rides along as
         ``model.fit_result`` (so the one-shot wrappers stay thin).
+
+        ``k`` overrides ``config.n_clusters``; ``k="auto"`` picks K by the
+        eigengap criterion over the already-computed rank-``n_clusters``
+        spectrum (``config.n_clusters`` acts as K_max) — the chosen K and
+        the gap profile land in ``fit_result.diagnostics["k_auto"]``.
 
         ``x0`` warm-starts the eigensolve from a prior subspace — a previous
         fit's ``eig`` state, an ``EigResult``, or an (N, k) block over the
@@ -136,19 +142,39 @@ class SCRBModel:
         ``ExecutionPlan.eig_x0``; refitting with a converged subspace exits
         the solver at iteration 0.
         """
+        auto_k = False
+        if isinstance(k, str):
+            if k != "auto":
+                raise ValueError(f"k must be an int or 'auto', got {k!r}")
+            auto_k = True
+        elif k is not None:
+            config = dataclasses.replace(config, n_clusters=int(k))
         if plan is None:
             plan = _executor.plan_from_config(config, mesh=mesh)
         if x0 is not None:
             plan = dataclasses.replace(plan, eig_x0=x0)
-        res = _executor.execute(x, config, plan, final_stage=final_stage,
-                                keep_embedding=keep_embedding,
-                                keep_state=True)
+        if auto_k:
+            res, config = cls._execute_auto_k(
+                x, config, plan, final_stage=final_stage,
+                keep_embedding=keep_embedding)
+        else:
+            res = _executor.execute(x, config, plan, final_stage=final_stage,
+                                    keep_embedding=keep_embedding,
+                                    keep_state=True)
         st = res.state
         z, eig, km = st["z"], st["eig"], st["km"]
         fitted = st["features"].fmap
         with res.timer.stage("oos_state"):
             oos_proj = st.get("oos_proj")
-            if oos_proj is not None:
+            part_state = st.get("partitioned")
+            if part_state is not None:
+                # partitioned fit: the merge already factored the
+                # representative matrix into (V, Σ) and summed the degree
+                # dual — the O(D·K) serving state is precomputed
+                v = np.asarray(part_state["right_vectors"], np.float32)
+                sig = np.asarray(part_state["singular_values"], np.float32)
+                dual = np.asarray(part_state["degree_dual"], np.float32)
+            elif oos_proj is not None:
                 # compressive solver: the (D, d) filter projection q IS the
                 # serving subspace — the fit embedding was E = Ẑ q, so unit
                 # "singular values" make _projection = q exactly and
@@ -156,6 +182,7 @@ class SCRBModel:
                 # embedding and labels (no extra pass needed)
                 v = np.asarray(oos_proj, np.float32)
                 sig = np.ones((v.shape[1],), np.float32)
+                dual = np.asarray(z.degree_dual(), np.float32)
             else:
                 sig = np.asarray(res.singular_values, np.float32)
                 inv_sig = np.where(sig > 1e-6,
@@ -166,7 +193,7 @@ class SCRBModel:
                 # streaming plans, psum'd Ẑᵀ on mesh plans)
                 v = np.asarray(z.rmatvec(eig.vectors), np.float32) \
                     * inv_sig[None, :]
-            dual = np.asarray(z.degree_dual(), np.float32)
+                dual = np.asarray(z.degree_dual(), np.float32)
         res.state = None          # drop the O(N) internals; model is O(D·K)
         return cls(
             config=config,
@@ -179,6 +206,73 @@ class SCRBModel:
             laplacian_normalize=plan.laplacian_normalize,
             fit_result=res,
         )
+
+    @staticmethod
+    def _execute_auto_k(x, config, plan, *, final_stage, keep_embedding):
+        """The ``k="auto"`` path: one executor run stopped after the
+        normalize stage with K_max = ``config.n_clusters`` eigenpairs, the
+        eigengap pick over the spectrum, then prefix-truncation of the
+        already-computed eigenvectors and the usual k-means at the chosen K
+        — no second eigensolve. Returns ``(FitResult, k-updated config)``."""
+        from repro.utils import fold_key
+
+        if plan.placement == "partitioned":
+            raise ValueError(
+                "k='auto' needs the global eigenspectrum; it is not "
+                "available under placement='partitioned' (pick k first, "
+                "then fit partitioned)")
+        k_max = config.n_clusters
+        if k_max < 3:
+            raise ValueError(
+                f"k='auto' needs n_clusters (K_max) >= 3, got {k_max}")
+        res = _executor.execute(x, config, plan, final_stage="normalize",
+                                keep_embedding=False, keep_state=True)
+        if res.diagnostics["solver"] == "compressive":
+            raise ValueError(
+                "k='auto' needs an eigensolver spectrum; solver="
+                "'compressive' never computes one (its Ritz values span a "
+                "filtered subspace, not the leading eigenpairs)")
+        st = res.state
+        z, eig = st["z"], st["eig"]
+        theta = np.asarray(res.singular_values, np.float64) ** 2
+        # eigengap: λ_1..λ_K ≈ 1 for K well-separated clusters, then a drop
+        # — choose the k ∈ [2, K_max-1] maximizing λ_k − λ_{k+1}
+        gaps = theta[:-1] - theta[1:]                    # gaps[i] = k=i+1
+        chosen = int(np.argmax(gaps[1:k_max - 1])) + 2
+        vecs = eig.vectors
+        if isinstance(vecs, streaming.ChunkedDense):
+            vecs_k = streaming.ChunkedDense(
+                tuple(c[:, :chosen] for c in vecs.chunks))
+        else:
+            vecs_k = vecs[:, :chosen]
+        eig_k = eig._replace(theta=np.asarray(eig.theta)[:chosen],
+                             vectors=vecs_k,
+                             resnorms=np.asarray(eig.resnorms)[:chosen])
+        cfg_k = dataclasses.replace(config, n_clusters=chosen)
+        key = jax.random.PRNGKey(config.seed)
+        with res.timer.stage("normalize"):
+            u_hat = z.map_row_chunks(row_normalize, vecs_k)
+        km, cluster_diag = None, {}
+        if final_stage == "kmeans":
+            with res.timer.stage("kmeans"):
+                km, cluster_diag = z.cluster(fold_key(key, "kmeans"),
+                                             u_hat, cfg_k)
+        res.labels = None if km is None else np.asarray(km.labels)
+        if keep_embedding:
+            res.embedding = (u_hat.to_array()
+                             if isinstance(u_hat, streaming.ChunkedDense)
+                             else np.asarray(u_hat))
+        res.singular_values = np.asarray(res.singular_values)[:chosen]
+        st["eig"], st["km"], st["u_hat"] = eig_k, km, u_hat
+        res.diagnostics.update(cluster_diag)
+        if km is not None:
+            res.diagnostics["kmeans_inertia"] = float(km.inertia)
+        res.diagnostics["k_auto"] = {
+            "k": chosen, "k_max": k_max,
+            "spectrum": [float(t) for t in theta],
+            "gaps": [float(g) for g in gaps],
+        }
+        return res, cfg_k
 
     # -- inference ---------------------------------------------------------
     @property
@@ -309,9 +403,7 @@ class SCRBModel:
     # -- serialization -----------------------------------------------------
     def save(self, path: str) -> None:
         """One-file artifact: npz arrays + JSON metadata header."""
-        cfg = dataclasses.asdict(self.config)
-        if cfg.get("block_rows") is not None:
-            cfg["block_rows"] = dict(cfg["block_rows"])
+        cfg = self.config.to_dict()
         meta = {
             "format_version": FORMAT_VERSION,
             "config": cfg,
@@ -356,7 +448,7 @@ class SCRBModel:
                          if k.startswith("fm_")}
             fitted = featuremap.load_fitted(meta["feature_map"], fm_arrays)
             return cls(
-                config=_executor.SCRBConfig(**meta["config"]),
+                config=_executor.SCRBConfig.from_dict(meta["config"]),
                 feature_map=fitted,
                 degree_dual=npz["degree_dual"],
                 right_vectors=npz["right_vectors"],

@@ -23,20 +23,18 @@ without refitting) or to ``save()`` a deployable artifact.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 
 # Re-exported from the executor so the public import surface is unchanged.
 from repro.core.executor import (  # noqa: F401
-    ExecutionPlan, SCRBConfig, SCRBResult, execute, plan_from_config,
+    ExecutionPlan, FitResult, SCRBConfig, SCRBResult, execute,
+    plan_from_config,
 )
 from repro.core.model import SCRBModel
-from repro.utils import StageTimer
 
 
-def sc_rb(x: jax.Array, config: SCRBConfig) -> SCRBResult:
+def sc_rb(x: jax.Array, config: SCRBConfig) -> FitResult:
     """Run Algorithm 2 on a single host/device.
 
     With ``config.chunk_size`` set, every stage streams host-resident row
@@ -47,21 +45,13 @@ def sc_rb(x: jax.Array, config: SCRBConfig) -> SCRBResult:
     return SCRBModel.fit(x, config).fit_result
 
 
-@dataclasses.dataclass
-class SpectralEmbedding:
-    """Stages 1–4 output. Iterates as the historical ``(embedding,
-    singular_values)`` pair; per-stage timings ride along in ``timer``."""
-
-    embedding: jax.Array          # (N, K) row-normalized
-    singular_values: jax.Array    # (K,)
-    timer: StageTimer
-
-    def __iter__(self):
-        yield self.embedding
-        yield self.singular_values
+#: Historical name for the stages-1–4 result; ``FitResult`` iterates as the
+#: legacy ``(embedding, singular_values)`` pair so call sites that unpack
+#: ``spectral_embed`` keep working unchanged.
+SpectralEmbedding = FitResult
 
 
-def spectral_embed(x: jax.Array, config: SCRBConfig) -> SpectralEmbedding:
+def spectral_embed(x: jax.Array, config: SCRBConfig) -> FitResult:
     """Stages 1–4 only: row-normalized embedding + singular values.
 
     Exposed for framework integration (e.g. clustering LM representations
@@ -71,10 +61,7 @@ def spectral_embed(x: jax.Array, config: SCRBConfig) -> SpectralEmbedding:
     per-stage timings. The result unpacks as ``(embedding, singular_values)``
     for backwards compatibility.
     """
-    model = SCRBModel.fit(x, config, final_stage="normalize")
-    res = model.fit_result
-    return SpectralEmbedding(
-        jnp.asarray(res.embedding),
-        jnp.asarray(res.singular_values),
-        res.timer,
-    )
+    res = SCRBModel.fit(x, config, final_stage="normalize").fit_result
+    res.embedding = jnp.asarray(res.embedding)
+    res.singular_values = jnp.asarray(res.singular_values)
+    return res

@@ -52,16 +52,17 @@ from repro.utils import prefetch_to_device
 
 def _solver_precond(cfg, deg) -> "Optional[np.ndarray]":
     """The (N,) diagonal preconditioner a config selects — the degree-based
-    Jacobi diagonal for ``solver_precond="degree"`` (diag(ẐẐᵀ)_i = 1/deg_i
-    exactly under the RB self-collision identity), else None. The LOBPCG
-    family applies it to the residual block; lanczos/subspace ignore it."""
-    if cfg.solver_precond == "degree":
+    Jacobi diagonal for ``SolverOptions.precond="degree"`` (diag(ẐẐᵀ)_i =
+    1/deg_i exactly under the RB self-collision identity), else None. The
+    LOBPCG family applies it to the residual block; lanczos/subspace ignore
+    it."""
+    precond = cfg.solver_options.precond
+    if precond == "degree":
         return eigensolver.degree_precond(np.asarray(deg))
-    if cfg.solver_precond in ("none", None):
+    if precond in ("none", None):
         return None
     raise ValueError(
-        f"unknown solver_precond {cfg.solver_precond!r}; "
-        f"options ('degree', 'none')")
+        f"unknown solver precond {precond!r}; options ('degree', 'none')")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -185,12 +186,13 @@ class DeviceRows:
         return np.asarray(counts).astype(np.float32)
 
     def eigenpairs(self, k, key, cfg, x0=None) -> eigensolver.EigResult:
+        so = cfg.solver_options
         eig = eigensolver.top_k_eigenpairs(
             self.adj.gram_matvec, self.n, k, key,
-            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-            buffer=cfg.solver_buffer, x0=x0,
+            solver=so.solver, max_iters=so.iters, tol=so.tol,
+            buffer=so.buffer, x0=x0,
             precond=_solver_precond(cfg, self.deg),
-            stable_tol=cfg.solver_stable_tol)
+            stable_tol=so.stable_tol)
         jax.block_until_ready(eig.vectors)
         return eig
 
@@ -325,13 +327,14 @@ class HostChunkedRows:
         return acc
 
     def eigenpairs(self, k, key, cfg, x0=None) -> eigensolver.EigResult:
+        so = cfg.solver_options
         return eigensolver.top_k_eigenpairs(
             self.ell.gram_matvec_chunked, self.n, k, key,
-            solver=cfg.solver, max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-            buffer=cfg.solver_buffer, streaming=True,
+            solver=so.solver, max_iters=so.iters, tol=so.tol,
+            buffer=so.buffer, streaming=True,
             chunk_sizes=self.ell.chunk_sizes, x0=x0,
             precond=_solver_precond(cfg, self.store.deg),
-            stable_tol=cfg.solver_stable_tol)
+            stable_tol=so.stable_tol)
 
     def cluster(self, key, u_hat, cfg) -> Tuple[Any, dict]:
         kmeans_steps = max(cfg.kmeans_iters, u_hat.n_chunks)
@@ -350,7 +353,7 @@ class HostChunkedRows:
             # widest dense chunk on device: the (chunk, k+buffer) LOBPCG block
             "embedding_device_bytes_peak": ell.max_chunk_rows * 4
             * eigensolver.lobpcg_block_width(
-                ell.n, cfg.n_clusters, cfg.solver_buffer),
+                ell.n, cfg.n_clusters, cfg.solver_options.buffer),
             # measured: largest single H2D upload issued by any chunk sweep
             # (degrees, LOBPCG mat-vecs, row normalize, k-means) — the
             # runtime cross-check that no sweep streamed an O(N) item
@@ -544,9 +547,10 @@ class MeshRows:
         return np.asarray(counts)[:, 0].astype(np.float32)
 
     def eigenpairs(self, k, key, cfg, x0=None) -> eigensolver.EigResult:
+        so = cfg.solver_options
         precond = _solver_precond(cfg, self.deg)
-        if cfg.solver in ("lobpcg", "lobpcg_host") and 3 * k <= self.n:
-            b = eigensolver.lobpcg_block_width(self.n, k, cfg.solver_buffer)
+        if so.solver in ("lobpcg", "lobpcg_host") and 3 * k <= self.n:
+            b = eigensolver.lobpcg_block_width(self.n, k, so.buffer)
             with self.mesh:
                 matvec = self._gram_fn()
                 if x0 is not None:
@@ -557,8 +561,8 @@ class MeshRows:
                 x0s = jax.device_put(start, self._row_sharding(self.mesh))
                 solve = functools.partial(
                     eigensolver.lobpcg, matvec,
-                    max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-                    stable_tol=cfg.solver_stable_tol, stable_k=k, conv_k=k)
+                    max_iters=so.iters, tol=so.tol,
+                    stable_tol=so.stable_tol, stable_k=k, conv_k=k)
                 if precond is None:
                     eig = jax.jit(solve)(x0s)
                 else:
@@ -577,10 +581,10 @@ class MeshRows:
         # mat-vec; only the small Krylov/Ritz algebra differs.
         with self.mesh:
             eig = eigensolver.top_k_eigenpairs(
-                self._gram_fn(), self.n, k, key, solver=cfg.solver,
-                max_iters=cfg.solver_iters, tol=cfg.solver_tol,
-                buffer=cfg.solver_buffer, x0=x0, precond=precond,
-                stable_tol=cfg.solver_stable_tol)
+                self._gram_fn(), self.n, k, key, solver=so.solver,
+                max_iters=so.iters, tol=so.tol,
+                buffer=so.buffer, x0=x0, precond=precond,
+                stable_tol=so.stable_tol)
             vectors = jax.block_until_ready(jax.device_put(
                 eig.vectors, self._row_sharding(self.mesh)))
         return eigensolver.EigResult(eig.theta, vectors, eig.resnorms,
@@ -603,3 +607,59 @@ class MeshRows:
             # per-device temporary working set of a within-shard ELL sweep
             "ell_device_bytes_peak": chunk * self.idx.shape[1] * 4,
         }
+
+
+# --------------------------------------------------------------------------
+# Partitioned placement — the divide-and-conquer fit's aggregate handle.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PartitionedRows:
+    """Union of per-partition representations (``placement="partitioned"``).
+
+    Each partition's sub-fit built its own ``DeviceRows`` /
+    ``HostChunkedRows`` under one shared fitted feature map, so all
+    partitions live in a single feature space; this container is what the
+    merge in ``repro.core.partitioned`` hands to ``SCRBModel.fit`` as the
+    run's ``state["z"]``. It exposes the aggregate protocol surface the
+    model/merge path needs — the summed degree dual, degree ranges and
+    residency diagnostics — not the solver-facing mat-vec surface (the
+    whole point of the partitioned fit is that no global solve happens).
+    """
+
+    kind = "partitioned"
+    parts: Tuple[Any, ...]        # per-partition RowMatrix representations
+    fmap: Any                     # the shared fitted feature map
+    dual: np.ndarray              # (D,) summed Zᵀ1 across partitions
+
+    @property
+    def n(self) -> int:
+        return sum(p.n for p in self.parts)
+
+    @property
+    def n_partitions(self) -> int:
+        return len(self.parts)
+
+    def degree_range(self) -> Tuple[float, float]:
+        """Within-partition degree range (each partition normalizes against
+        its own degrees — that is the divide-and-conquer approximation)."""
+        ranges = [p.degree_range() for p in self.parts]
+        return min(r[0] for r in ranges), max(r[1] for r in ranges)
+
+    def degree_dual(self) -> np.ndarray:
+        return self.dual
+
+    def residency_diagnostics(self, cfg) -> dict:
+        """Aggregate of the per-partition residency diagnostics: peak byte
+        counts are max'd (partitions share the device sequentially or run on
+        distinct devices), chunk counts are summed."""
+        out = {"n_partitions": self.n_partitions}
+        for diag in (p.residency_diagnostics(cfg) for p in self.parts):
+            for key, val in diag.items():
+                if key == "n_chunks":
+                    out[key] = out.get(key, 0) + val
+                elif isinstance(val, (int, float)) and not isinstance(val, bool):
+                    out[key] = max(out.get(key, 0), val)
+                else:
+                    out[key] = val
+        return out

@@ -15,6 +15,7 @@ the slow-link hierarchy.
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 from repro.utils import make_mesh_compat
 
@@ -29,6 +30,18 @@ def make_host_mesh() -> jax.sharding.Mesh:
     """Whatever devices exist locally, as a 1-D data mesh (tests/examples)."""
     n = len(jax.devices())
     return make_mesh_compat((n,), ("data",))
+
+
+def partition_devices(mesh: jax.sharding.Mesh) -> tuple:
+    """One device per data-axis shard (model-axis index 0) — the devices the
+    partitioned fit (``placement="partitioned"``) pins one partition's
+    single-device sub-fit to, so partitions spread over the same axes that
+    carry N in the SPMD plans."""
+    axes = data_axes(mesh)
+    arr = np.asarray(mesh.devices)
+    idx = tuple(slice(None) if name in axes else 0
+                for name in mesh.axis_names)
+    return tuple(arr[idx].flat)
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> tuple:

@@ -179,6 +179,45 @@ def test_load_rejects_unknown_major(blobs, tmp_path):
         SCRBModel.load(path)
 
 
+@pytest.mark.parametrize("chunk_size", CHUNKINGS)
+def test_fit_k_auto_picks_eigengap(blobs, chunk_size):
+    """k="auto": n_clusters acts as K_max, the eigengap over the computed
+    spectrum picks K (4 well-separated blobs ⇒ 4), and the model/centroids/
+    result are all consistently truncated to the chosen K — under both
+    residencies."""
+    x, y = blobs
+    cfg = SCRBConfig(**{**BASE, "n_clusters": 8}, chunk_size=chunk_size)
+    model = SCRBModel.fit(x, cfg, k="auto")
+    diag = model.fit_result.diagnostics["k_auto"]
+    assert diag["k"] == 4 and diag["k_max"] == 8
+    assert len(diag["spectrum"]) == 8 and len(diag["gaps"]) == 7
+    assert model.config.n_clusters == 4
+    assert model.centroids.shape == (4, 4)
+    assert np.asarray(model.fit_result.embedding).shape == (x.shape[0], 4)
+    assert metrics.accuracy(model.fit_result.labels, y) > 0.95
+    pred = model.predict(x, batch_size=chunk_size)
+    assert metrics.accuracy(pred, model.fit_result.labels) >= 0.99
+
+
+def test_fit_k_overrides_and_auto_validation(blobs):
+    x, _ = blobs
+    m = SCRBModel.fit(x, SCRBConfig(**BASE), k=3)
+    assert m.config.n_clusters == 3
+    assert m.centroids.shape[0] == 3
+    with pytest.raises(ValueError, match="k must be"):
+        SCRBModel.fit(x, SCRBConfig(**BASE), k="anto")
+    with pytest.raises(ValueError, match="K_max"):
+        SCRBModel.fit(x, SCRBConfig(**{**BASE, "n_clusters": 2}), k="auto")
+    with pytest.raises(ValueError, match="compressive"):
+        SCRBModel.fit(x, SCRBConfig(**{**BASE, "n_clusters": 8},
+                                    solver="compressive"), k="auto")
+    from repro.core import PartitionOptions
+    with pytest.raises(ValueError, match="partitioned"):
+        SCRBModel.fit(x, SCRBConfig(**{**BASE, "n_clusters": 8},
+                                    partition=PartitionOptions(
+                                        n_partitions=2)), k="auto")
+
+
 def test_dense_feature_map_model_roundtrip(blobs, tmp_path):
     """The fitted-model API is registry-generic: a Nyström-map model (the
     standard Nyström out-of-sample extension) predicts its own fit labels

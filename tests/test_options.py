@@ -1,0 +1,149 @@
+"""Grouped-config API (PR 9 satellite): SolverOptions / CompressiveOptions /
+PartitionOptions, the flat-kwarg deprecation shims, the artifact round-trip,
+and the typed FitResult."""
+import dataclasses
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CompressiveOptions, FitResult, PartitionOptions, SCRBConfig, SCRBResult,
+    SolverOptions, SpectralEmbedding, sc_rb, spectral_embed,
+)
+from repro.data.synthetic import make_blobs
+
+
+# --------------------------------------------------------------------------
+# flat-kwarg shims
+# --------------------------------------------------------------------------
+
+def test_flat_kwargs_warn_and_fold():
+    with pytest.warns(DeprecationWarning, match="solver_tol"):
+        cfg = SCRBConfig(n_clusters=4, solver_tol=1e-3, solver="lanczos")
+    assert cfg.solver_options.tol == 1e-3
+    assert cfg.solver_options.solver == "lanczos"
+    # flat mirrors stay readable
+    assert cfg.solver_tol == 1e-3
+    assert cfg.solver == "lanczos"
+
+
+def test_compressive_flat_kwargs_fold():
+    with pytest.warns(DeprecationWarning, match="compressive_probes"):
+        cfg = SCRBConfig(n_clusters=4, compressive_probes=8,
+                         compressive_lambdas=[0.5, 0.4])
+    assert cfg.compressive_options.probes == 8
+    assert cfg.compressive_options.lambdas == (0.5, 0.4)
+    assert cfg.compressive_lambdas == (0.5, 0.4)
+
+
+def test_grouped_only_is_silent():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = SCRBConfig(
+            n_clusters=4,
+            solver_options=SolverOptions(solver="subspace", iters=50),
+            compressive_options=CompressiveOptions(probes=16),
+            partition=PartitionOptions(n_partitions=2))
+    assert cfg.solver == "subspace"
+    assert cfg.solver_iters == 50
+    assert cfg.compressive_probes == 16
+    assert cfg.partition.n_partitions == 2
+
+
+def test_defaults_materialize_groups():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = SCRBConfig(n_clusters=4)
+    assert cfg.solver_options == SolverOptions()
+    assert cfg.compressive_options == CompressiveOptions()
+    assert cfg.partition is None          # None means "not partitioned"
+
+
+def test_flat_wins_over_group_with_warning():
+    with pytest.warns(DeprecationWarning, match="solver_iters"):
+        cfg = SCRBConfig(n_clusters=4, solver_iters=7,
+                         solver_options=SolverOptions(iters=99))
+    assert cfg.solver_options.iters == 7
+
+
+def test_dataclasses_replace_is_silent():
+    """replace() re-passes every flat mirror equal to the group value — the
+    shim must not warn on that path."""
+    with pytest.warns(DeprecationWarning):
+        cfg = SCRBConfig(n_clusters=4, solver_tol=1e-3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg2 = dataclasses.replace(cfg, n_clusters=8)
+    assert cfg2.solver_options.tol == 1e-3
+    assert cfg2.n_clusters == 8
+
+
+def test_group_accepts_mapping():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = SCRBConfig(n_clusters=4,
+                         solver_options={"solver": "lanczos"},
+                         partition={"n_partitions": 3})
+    assert cfg.solver_options.solver == "lanczos"
+    assert cfg.partition.n_partitions == 3
+    with pytest.raises(TypeError, match="solver_options"):
+        SCRBConfig(n_clusters=4, solver_options=42)
+
+
+def test_partition_options_validation():
+    with pytest.raises(ValueError, match="n_partitions"):
+        PartitionOptions(n_partitions=0)
+    with pytest.raises(ValueError, match="workers"):
+        PartitionOptions(n_partitions=2, workers=0)
+
+
+def test_to_dict_from_dict_json_round_trip():
+    cfg = SCRBConfig(
+        n_clusters=4, n_grids=128,
+        solver_options=SolverOptions(solver="lanczos", tol=1e-3),
+        compressive_options=CompressiveOptions(lambdas=(0.5, 0.4)),
+        partition=PartitionOptions(n_partitions=3, local_clusters=8))
+    d = json.loads(json.dumps(cfg.to_dict()))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        back = SCRBConfig.from_dict(d)      # round-trip must not warn
+    assert back == cfg
+    assert back.compressive_options.lambdas == (0.5, 0.4)
+    assert back.partition == cfg.partition
+
+
+def test_from_dict_reads_pre_grouping_flat_config():
+    """Artifact configs written before the grouping (flat-only dicts) load
+    silently and fold into groups."""
+    flat = {"n_clusters": 4, "n_grids": 64, "solver": "subspace",
+            "solver_iters": 80, "compressive_probes": 16}
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        cfg = SCRBConfig.from_dict(flat)
+    assert cfg.solver_options.solver == "subspace"
+    assert cfg.solver_options.iters == 80
+    assert cfg.compressive_options.probes == 16
+
+
+# --------------------------------------------------------------------------
+# FitResult
+# --------------------------------------------------------------------------
+
+def test_fit_result_type_and_legacy_unpack():
+    x, y = make_blobs(400, 6, 3, seed=0)
+    cfg = SCRBConfig(n_clusters=3, n_grids=64, d_g=1024,
+                     kmeans_replicates=2, seed=0)
+    res = sc_rb(x, cfg)
+    assert isinstance(res, FitResult)
+    assert SCRBResult is FitResult          # deprecated alias
+    assert SpectralEmbedding is FitResult   # pipeline alias
+    assert res.labels.shape == (400,)
+    assert res.timings == res.timer.times
+
+    se = spectral_embed(x, cfg)
+    emb, sv = se                            # legacy tuple unpack
+    assert np.asarray(emb).shape == (400, 3)
+    assert np.asarray(sv).shape == (3,)
+    assert se.labels is None                # stopped before kmeans
