@@ -22,8 +22,11 @@ survive eviction — the re-fault costs one H2D, zero recompiles).
 ``--gate`` (CI bench-smoke) fails unless: engine rows/s ≥ 3× cold AND ≥ 1×
 warm; p99 ≤ 5× p50; compile count == distinct cells with zero steady-state
 recompiles; engine outputs bit-identical to direct ``model.predict``;
-steady-state staging allocations zero; LRU leg evicts and stays correct.
-Snapshot JSON goes to ``--out`` (committed as bench_results/BENCH_PR8.json).
+steady-state staging allocations zero; LRU leg evicts and stays correct;
+and the engine's own ``engine_request_latency_seconds`` histogram quantiles
+agree with the external ticket-timestamp p50/p99 within one log-bucket
+growth factor. Snapshot JSON goes to ``--out`` (committed as
+bench_results/BENCH_PR8.json).
 """
 from __future__ import annotations
 
@@ -113,7 +116,7 @@ def run_engine_once(eng, mix, waves: int):
             "p50_ms": float(np.percentile(lat, 50) * 1e3),
             "p99_ms": float(np.percentile(lat, 99) * 1e3),
             "max_ms": float(lat.max() * 1e3)}, \
-        [r.values for r in results]
+        [r.values for r in results], results
 
 
 def run_lru_leg(models, mix):
@@ -175,10 +178,10 @@ def run(smoke: bool, n_requests: int, waves: int, seed: int = 0) -> dict:
     out["engine_warmup_s"] = time.perf_counter() - t0
     out["engine_warmup_compiles"] = eng.total_compiles
 
-    run1, outs1 = run_engine_once(eng, mix, waves)
+    run1, outs1, res1 = run_engine_once(eng, mix, waves)
     compiles_run1 = eng.total_compiles
     alloc_run1 = eng.stats()["staging_allocations"]
-    run2, outs2 = run_engine_once(eng, mix, waves)
+    run2, outs2, res2 = run_engine_once(eng, mix, waves)
     stats = eng.stats()
     run1["recompiles"] = compiles_run1 - out["engine_warmup_compiles"]
     run2["recompiles"] = eng.total_compiles - compiles_run1
@@ -199,6 +202,25 @@ def run(smoke: bool, n_requests: int, waves: int, seed: int = 0) -> dict:
           f"p99 {run2['p99_ms']:.1f}ms; {stats['cells']} cells, "
           f"{run2['recompiles']} steady recompiles, bit_identical="
           f"{out['bit_identical']}")
+
+    # observability cross-check: the engine's own log-bucketed latency
+    # histograms must agree with the external ticket-timestamp math above —
+    # within one histogram bucket growth factor (10^0.25 ≈ 1.78 + sampling
+    # slack), since the histogram stores buckets, not samples
+    agreement = {}
+    all_res = res1 + res2
+    for name, mode in sorted({(r.model, r.mode) for r in all_res}):
+        ext = np.asarray([r.latency for r in all_res
+                          if r.model == name and r.mode == mode])
+        hq = eng.latency_quantiles(name, mode, qs=(0.5, 0.99))
+        agreement[f"{name}/{mode}"] = {
+            "count": int(ext.size),
+            "external_p50_ms": float(np.percentile(ext, 50) * 1e3),
+            "hist_p50_ms": float(hq[0.5] * 1e3),
+            "external_p99_ms": float(np.percentile(ext, 99) * 1e3),
+            "hist_p99_ms": float(hq[0.99] * 1e3),
+        }
+    out["latency_hist_agreement"] = agreement
 
     out["lru"] = run_lru_leg(models, mix[:12])
     print(f"[serve] lru leg (1 slot): {out['lru']['evictions']} evictions, "
@@ -243,6 +265,14 @@ def gate(out: dict) -> list[str]:
         failures.append(
             "engine outputs differ from direct model.predict/transform — "
             "bucket padding is contaminating real rows")
+    for series, chk in out.get("latency_hist_agreement", {}).items():
+        for q, bound in (("p50", 1.9), ("p99", 2.5)):
+            ext, hist = chk[f"external_{q}_ms"], chk[f"hist_{q}_ms"]
+            if not (ext / bound <= hist <= ext * bound):
+                failures.append(
+                    f"{series}: engine histogram {q} {hist:.3f}ms disagrees "
+                    f"with external ticket math {ext:.3f}ms (outside {bound}x "
+                    f"— log-bucket quantile estimation broke)")
     lru = out["lru"]
     if lru["evictions"] == 0:
         failures.append("LRU leg saw zero evictions with 1 resident slot "

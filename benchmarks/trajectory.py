@@ -1,0 +1,256 @@
+"""Cross-PR perf-trajectory report from the committed bench snapshots.
+
+Every perf-gated PR commits a ``bench_results/BENCH_PR<n>.json`` snapshot,
+but each one only proves *that PR's* gate — nobody sees the curve. This
+aggregator closes the ROADMAP's "publish the trajectory" bullet: it sniffs
+each snapshot's family by its keys (the schemas differ per PR era), pulls
+the comparable headline numbers out of each, and renders one Markdown
+report (plus a machine-readable JSON) of how fit stage times, solver
+iterations, serving throughput/latency, and tracing overhead moved across
+PRs. Run by CI's bench-smoke (over the freshly regenerated snapshots) and
+uploaded as an artifact; the committed copies live in ``bench_results/``.
+
+Families recognized:
+
+  fig6   — streaming N-sweep (``ns``/``total_s``/``stages``/``loglog_slope``;
+           PR 2/6/7 era, regenerated every bench-smoke as BENCH_PR.json)
+  serve  — engine vs per-request legs (``engine``/``speedup_vs_cold``; PR 8)
+  part   — partitioned divide-and-conquer fit (``partitioned_total_s``; PR 9)
+  obs    — observability overhead legs (``overhead``; PR 10)
+
+Unknown families degrade gracefully to a key listing, so future snapshot
+shapes appear in the report without breaking it.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import re
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+
+def _pr_number(path: str) -> int:
+    """BENCH_PR6.json → 6; the unnumbered BENCH_PR.json (the rolling fig6
+    smoke snapshot) sorts first as 0."""
+    m = re.search(r"BENCH_PR(\d+)\.json$", os.path.basename(path))
+    return int(m.group(1)) if m else 0
+
+
+def discover(paths: List[str]) -> List[Tuple[int, str, dict]]:
+    """Load snapshots, deduplicating by basename (a CI run may pass both the
+    committed file and a freshly regenerated copy — the *last* occurrence of
+    a basename wins, so list regenerated dirs after ``bench_results/``)."""
+    by_name: Dict[str, str] = {}
+    for p in paths:
+        for f in sorted(glob.glob(os.path.join(p, "BENCH_PR*.json"))
+                        if os.path.isdir(p) else [p]):
+            by_name[os.path.basename(f)] = f
+    out = []
+    for name, f in by_name.items():
+        try:
+            with open(f) as fh:
+                out.append((_pr_number(f), name, json.load(fh)))
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[trajectory] skipping unreadable {f}: {e}",
+                  file=sys.stderr)
+    return sorted(out, key=lambda t: (t[0], t[1]))
+
+
+def family(d: dict) -> str:
+    if "overhead" in d:
+        return "obs"
+    if "partitioned_total_s" in d:
+        return "part"
+    if "engine" in d and "per_request_cold" in d:
+        return "serve"
+    if "ns" in d and "total_s" in d:
+        return "fig6"
+    return "unknown"
+
+
+def _f(v: Any, fmt: str = "{:.2f}") -> str:
+    return fmt.format(v) if isinstance(v, (int, float)) else "—"
+
+
+def summarize_fig6(pr: int, d: dict) -> Dict[str, Any]:
+    ns, total = d["ns"], d["total_s"]
+    stages = d.get("stages", {})
+    top_n = ns[-1]
+    row = {
+        "family": "fig6", "n_max": top_n,
+        "total_s_at_n_max": total[-1],
+        "loglog_slope": d.get("loglog_slope"),
+        "solver": d.get("solver"),
+        "solver_iters": (d.get("sweep_solver_iters") or [None])[-1],
+        "prefetch_speedup": d.get("prefetch_speedup"),
+    }
+    for st, ts in stages.items():
+        if isinstance(ts, list) and ts:
+            row[f"stage_{st}_s"] = ts[-1]
+    return row
+
+
+def summarize_serve(pr: int, d: dict) -> Dict[str, Any]:
+    run2 = d.get("engine", {}).get("run2", {})
+    return {
+        "family": "serve",
+        "rows_per_s": run2.get("rows_per_s"),
+        "qps": run2.get("qps"),
+        "p50_ms": run2.get("p50_ms"),
+        "p99_ms": run2.get("p99_ms"),
+        "speedup_vs_cold": d.get("speedup_vs_cold"),
+        "speedup_vs_warm": d.get("speedup_vs_warm"),
+        "cells": d.get("engine", {}).get("cells"),
+        "hist_agreement": bool(d.get("latency_hist_agreement")),
+    }
+
+
+def summarize_part(pr: int, d: dict) -> Dict[str, Any]:
+    return {
+        "family": "part", "n": d.get("n"),
+        "n_partitions": d.get("n_partitions"),
+        "workers": d.get("workers"),
+        "global_total_s": d.get("global_total_s"),
+        "partitioned_total_s": d.get("partitioned_total_s"),
+        "speedup": d.get("speedup"),
+        "ari_vs_lobpcg": d.get("ari_vs_lobpcg"),
+    }
+
+
+def summarize_obs(pr: int, d: dict) -> Dict[str, Any]:
+    ov = d.get("overhead", {})
+    return {
+        "family": "obs",
+        "baseline_s": ov.get("baseline_s"),
+        "disabled_overhead_pct": ov.get("disabled_overhead_pct"),
+        "enabled_overhead_pct": ov.get("enabled_overhead_pct"),
+        "trace_spans": d.get("partitioned_trace", {}).get("spans"),
+    }
+
+
+_SUMMARIZERS = {"fig6": summarize_fig6, "serve": summarize_serve,
+                "part": summarize_part, "obs": summarize_obs}
+
+
+def build(paths: List[str]) -> dict:
+    snapshots = discover(paths)
+    rows = []
+    for pr, name, d in snapshots:
+        fam = family(d)
+        if fam in _SUMMARIZERS:
+            row = _SUMMARIZERS[fam](pr, d)
+        else:
+            row = {"family": "unknown", "keys": sorted(d.keys())[:12]}
+        row.update({"pr": pr, "file": name,
+                    "gate_failures": len(d.get("gate_failures", []))})
+        rows.append(row)
+    return {"snapshots": rows, "sources": paths}
+
+
+def _md_table(headers: List[str], rows: List[List[str]]) -> List[str]:
+    lines = ["| " + " | ".join(headers) + " |",
+             "|" + "|".join("---" for _ in headers) + "|"]
+    lines += ["| " + " | ".join(r) + " |" for r in rows]
+    return lines
+
+
+def render_markdown(report: dict) -> str:
+    rows = report["snapshots"]
+    lines = ["# Perf trajectory across PRs", "",
+             "Aggregated from `bench_results/BENCH_PR*.json` by "
+             "`benchmarks/trajectory.py` (regenerated every bench-smoke; "
+             "one row per committed per-PR gate snapshot).", ""]
+
+    fig6 = [r for r in rows if r["family"] == "fig6"]
+    if fig6:
+        lines += ["## Fit: streaming N-sweep (fig6 family)", ""]
+        lines += _md_table(
+            ["PR", "N max", "total s", "slope", "solver", "iters",
+             "svd s", "kmeans s", "gate fails"],
+            [[str(r["pr"] or "smoke"), str(r["n_max"]),
+              _f(r["total_s_at_n_max"]), _f(r["loglog_slope"], "{:.3f}"),
+              str(r.get("solver") or "—"), _f(r.get("solver_iters"), "{:.0f}"),
+              _f(r.get("stage_svd_s")), _f(r.get("stage_kmeans_s")),
+              str(r["gate_failures"])] for r in fig6])
+        lines.append("")
+
+    part = [r for r in rows if r["family"] == "part"]
+    if part:
+        lines += ["## Fit: partitioned divide-and-conquer (PR 9 family)", ""]
+        lines += _md_table(
+            ["PR", "N", "parts×workers", "global s", "partitioned s",
+             "speedup", "ARI vs LOBPCG"],
+            [[str(r["pr"]), str(r["n"]),
+              f'{r["n_partitions"]}×{r["workers"]}',
+              _f(r["global_total_s"]), _f(r["partitioned_total_s"]),
+              _f(r["speedup"]), _f(r["ari_vs_lobpcg"], "{:.3f}")]
+             for r in part])
+        lines.append("")
+
+    serve = [r for r in rows if r["family"] == "serve"]
+    if serve:
+        lines += ["## Serve: engine steady state (PR 8 family)", ""]
+        lines += _md_table(
+            ["PR", "rows/s", "req/s", "p50 ms", "p99 ms", "vs cold",
+             "vs warm", "hist agreement"],
+            [[str(r["pr"]), _f(r["rows_per_s"], "{:.0f}"),
+              _f(r["qps"], "{:.0f}"), _f(r["p50_ms"]), _f(r["p99_ms"]),
+              _f(r["speedup_vs_cold"], "{:.1f}x"),
+              _f(r["speedup_vs_warm"], "{:.1f}x"),
+              "checked" if r.get("hist_agreement") else "—"]
+             for r in serve])
+        lines.append("")
+
+    obs = [r for r in rows if r["family"] == "obs"]
+    if obs:
+        lines += ["## Observability overhead (PR 10 family)", ""]
+        lines += _md_table(
+            ["PR", "baseline fit s", "tracing off +%", "tracing on +%",
+             "trace spans"],
+            [[str(r["pr"]), _f(r["baseline_s"]),
+              _f(r["disabled_overhead_pct"]), _f(r["enabled_overhead_pct"]),
+              str(r.get("trace_spans") or "—")] for r in obs])
+        lines.append("")
+
+    unknown = [r for r in rows if r["family"] == "unknown"]
+    if unknown:
+        lines += ["## Unrecognized snapshots", ""]
+        lines += [f"- `{r['file']}`: keys {r['keys']}" for r in unknown]
+        lines.append("")
+    return "\n".join(lines)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="snapshot files or directories (later paths "
+                         "override earlier basenames); default "
+                         "bench_results/")
+    ap.add_argument("--out-md", default="bench_results/TRAJECTORY.md")
+    ap.add_argument("--out-json", default="bench_results/TRAJECTORY.json")
+    args = ap.parse_args(argv)
+    paths = args.paths or ["bench_results"]
+    report = build(paths)
+    if not report["snapshots"]:
+        print(f"[trajectory] no BENCH_PR*.json found under {paths}",
+              file=sys.stderr)
+        return 1
+    md = render_markdown(report)
+    for out, payload in ((args.out_md, md),
+                         (args.out_json, json.dumps(report, indent=1))):
+        d = os.path.dirname(out)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(out, "w") as f:
+            f.write(payload)
+    print(f"[trajectory] {len(report['snapshots'])} snapshots → "
+          f"{args.out_md}")
+    print(md)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

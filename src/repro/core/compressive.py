@@ -44,7 +44,18 @@ import numpy as np
 from repro.core import streaming
 from repro.core.kmeans import KMeansResult, kmeans as _kmeans
 from repro.kernels import ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.utils import fold_key
+
+_SOLVES_TOTAL = obs_metrics.REGISTRY.counter(
+    "repro_eigensolves_total", "Completed top-k eigensolves.", ("solver",))
+_SOLVER_ITERS = obs_metrics.REGISTRY.histogram(
+    "repro_solver_iterations", "Block mat-vec iterations per eigensolve.",
+    ("solver",), buckets=obs_metrics.log_buckets(1.0, 1e4))
+_SOLVER_RESNORM = obs_metrics.REGISTRY.gauge(
+    "repro_solver_resnorm_max", "Worst top-k residual of the last eigensolve.",
+    ("solver",))
 
 SOLVER_NAME = "compressive"
 
@@ -259,6 +270,28 @@ class CompressiveEmbedding:
 def compressive_embed(z, k: int, key, cfg, *,
                       laplacian_normalize: bool = True
                       ) -> CompressiveEmbedding:
+    """Observability wrapper over :func:`_compressive_embed_impl`: the solve
+    runs under an ``eigensolve`` span (``solver="compressive"`` — one track
+    with the iterative solvers, so solver bake-offs read off one metric) and
+    feeds the same ``repro_eigensolves_total`` / ``repro_solver_iterations``
+    / ``repro_solver_resnorm_max`` series."""
+    with obs_trace.span("eigensolve", solver="compressive", n=z.n,
+                        k=k) as sp:
+        out = _compressive_embed_impl(
+            z, k, key, cfg, laplacian_normalize=laplacian_normalize)
+        res = np.asarray(out.resnorms[:k])
+        resnorm_max = float(res.max()) if res.size else 0.0
+        sp.set(iterations=int(out.iterations), resnorm_max=resnorm_max,
+               filter_degree=out.filter_degree, signals=out.signals)
+    _SOLVES_TOTAL.inc(solver="compressive")
+    _SOLVER_ITERS.observe(int(out.iterations), solver="compressive")
+    _SOLVER_RESNORM.set(resnorm_max, solver="compressive")
+    return out
+
+
+def _compressive_embed_impl(z, k: int, key, cfg, *,
+                            laplacian_normalize: bool = True
+                            ) -> CompressiveEmbedding:
     """The eigendecomposition-free spectral embedding (steps 1–2 + 4 of the
     module docstring); ``subset_cluster`` is step 3.
 

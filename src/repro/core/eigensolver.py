@@ -51,7 +51,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
 Matvec = Callable[[jax.Array], jax.Array]
+
+_SOLVES_TOTAL = obs_metrics.REGISTRY.counter(
+    "repro_eigensolves_total", "Completed top-k eigensolves.", ("solver",))
+_SOLVER_ITERS = obs_metrics.REGISTRY.histogram(
+    "repro_solver_iterations", "Block mat-vec iterations per eigensolve.",
+    ("solver",), buckets=obs_metrics.log_buckets(1.0, 1e4))
+_SOLVER_RESNORM = obs_metrics.REGISTRY.gauge(
+    "repro_solver_resnorm_max", "Worst top-k residual of the last eigensolve.",
+    ("solver",))
 
 
 class EigResult(NamedTuple):
@@ -802,6 +814,46 @@ def _chunked_randomized_impl(matvec, x0c, *, depth: int = 2) -> EigResult:
 
 
 def top_k_eigenpairs(
+    matvec: Matvec,
+    n: int,
+    k: int,
+    key: jax.Array,
+    *,
+    solver: str = "lobpcg",
+    max_iters: int = 200,
+    tol: float = 1e-5,
+    buffer: int = 4,
+    streaming: bool = False,
+    chunk_sizes: Optional[Sequence[int]] = None,
+    x0=None,
+    precond=None,
+    stable_tol: Optional[float] = None,
+) -> EigResult:
+    """Solve for the top-k eigenpairs (observability wrapper).
+
+    Runs :func:`_top_k_eigenpairs_impl` (full semantics documented there)
+    under an ``eigensolve`` span and records the solve on the metrics
+    registry: ``repro_eigensolves_total{solver}``,
+    ``repro_solver_iterations{solver}`` and
+    ``repro_solver_resnorm_max{solver}``.
+    """
+    with obs_trace.span("eigensolve", solver=solver, n=n, k=k,
+                        streaming=streaming) as sp:
+        out = _top_k_eigenpairs_impl(
+            matvec, n, k, key, solver=solver, max_iters=max_iters, tol=tol,
+            buffer=buffer, streaming=streaming, chunk_sizes=chunk_sizes,
+            x0=x0, precond=precond, stable_tol=stable_tol)
+        iters = int(out.iterations)
+        res = np.asarray(out.resnorms)
+        resnorm_max = float(res.max()) if res.size else 0.0
+        sp.set(iterations=iters, resnorm_max=resnorm_max)
+    _SOLVES_TOTAL.inc(solver=solver)
+    _SOLVER_ITERS.observe(iters, solver=solver)
+    _SOLVER_RESNORM.set(resnorm_max, solver=solver)
+    return out
+
+
+def _top_k_eigenpairs_impl(
     matvec: Matvec,
     n: int,
     k: int,

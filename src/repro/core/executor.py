@@ -57,7 +57,16 @@ from repro.core.options import (
     normalize_config,
 )
 from repro.kernels import ops
+from repro.obs import memory as obs_memory
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.utils import StageTimer, fold_key
+
+_FITS_TOTAL = obs_metrics.REGISTRY.counter(
+    "repro_fits_total", "Completed executor fits.", ("placement", "solver"))
+_FIT_ROWS = obs_metrics.REGISTRY.counter(
+    "repro_fit_rows_total", "Rows processed by completed executor fits.",
+    ("placement",))
 
 # flat fields kept as deprecated shims; everything typed Any so the UNSET
 # sentinel can flow through (see repro.core.options.normalize_config)
@@ -114,6 +123,11 @@ class SCRBConfig:
     # ^ per-op Pallas row-tile caps (keys of ops.DEFAULT_BLOCK_ROWS, e.g.
     #   {"ell_spmm": 256}); None keeps the defaults. Applied to every kernel
     #   dispatch of the run via ops.block_rows_overrides.
+    trace: Optional[str] = None
+    # ^ Chrome-trace output path: enables repro.obs tracing for this fit and
+    #   exports the trace (Perfetto-viewable) on completion. None (default)
+    #   keeps tracing off; REPRO_TRACE=<path> enables it process-wide
+    #   instead. A run-local setting, never part of the saved artifact.
     # -- typed option groups (canonical; see repro.core.options) ------------
     solver_options: Optional[SolverOptions] = None
     # ^ None → SolverOptions() defaults (or the deprecated flat kwargs).
@@ -135,8 +149,11 @@ class SCRBConfig:
         know the flat keys."""
         d = {}
         for f in dataclasses.fields(self):
+            # trace is a run-local observability knob, not model config:
+            # keeping it out of the dict keeps same-major artifacts readable
+            # by older loaders (their from_dict is cls(**d))
             if f.name in ("solver_options", "compressive_options",
-                          "partition"):
+                          "partition", "trace"):
                 continue
             d[f.name] = getattr(self, f.name)
         if d.get("block_rows") is not None:
@@ -310,12 +327,48 @@ def execute(
     feature map, raw eigenpairs, k-means result) to ``result.state`` — the
     handle ``repro.core.model.SCRBModel.fit`` builds its out-of-sample
     extension from.
+
+    Observability: the whole run executes under a root ``fit`` span (stage
+    spans from ``StageTimer`` nest inside; a partitioned run's per-partition
+    sub-fits land on their worker-thread tracks), ``cfg.trace`` scopes
+    tracing to this run and exports the Chrome trace on exit, completed fits
+    feed ``repro_fits_total``/``repro_fit_rows_total``, and a host/device
+    memory watermark lands in ``diagnostics["memory"]``.
     """
     cfg = config
     if plan is None:
         plan = plan_from_config(cfg)
     if final_stage not in ("normalize", "kmeans"):
         raise ValueError(f"unknown final_stage {final_stage!r}")
+    with obs_trace.tracing(cfg.trace):
+        with obs_memory.Watermark() as wm:
+            with obs_trace.span("fit", placement=plan.placement,
+                                residency=plan.residency) as root:
+                res = _execute_impl(
+                    x, cfg, plan, final_stage=final_stage,
+                    keep_embedding=keep_embedding, keep_state=keep_state)
+                solver = res.diagnostics.get(
+                    "solver", cfg.solver_options.solver)
+                root.set(solver=solver)
+        res.diagnostics.setdefault("memory", wm.as_dict())
+    n_rows = (res.labels.shape[0] if res.labels is not None
+              else res.embedding.shape[0] if res.embedding is not None
+              else 0)
+    _FITS_TOTAL.inc(placement=plan.placement, solver=solver)
+    if n_rows:
+        _FIT_ROWS.inc(n_rows, placement=plan.placement)
+    return res
+
+
+def _execute_impl(
+    x,
+    cfg: SCRBConfig,
+    plan: ExecutionPlan,
+    *,
+    final_stage: str,
+    keep_embedding: bool,
+    keep_state: bool,
+) -> FitResult:
     if plan.placement == "partitioned":
         # lazy import: partitioned re-enters execute() per partition
         from repro.core import partitioned

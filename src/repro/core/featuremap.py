@@ -497,7 +497,7 @@ class ChunkedDenseFeatures:
     def _stream(self, *extra_chunk_seqs):
         return prefetch_to_device(
             zip(self.phi_chunks, self.rowscale_chunks, *extra_chunk_seqs),
-            enabled=self.prefetch, stats=self.h2d_stats)
+            enabled=self.prefetch, measure=self.h2d_stats)
 
     def rmatmat(self, u: jax.Array) -> jax.Array:
         q = jnp.zeros((self.width, u.shape[1]), jnp.float32)
@@ -553,11 +553,11 @@ def build_chunked_dense(
     h2d_stats: dict = {}
     colsum = jnp.zeros((phi_chunks[0].shape[1],), jnp.float32)
     for pc in prefetch_to_device(phi_chunks, enabled=prefetch,
-                                 stats=h2d_stats):
+                                 measure=h2d_stats):
         colsum = colsum + jnp.sum(pc, axis=0)
     deg_chunks, scale_chunks = [], []
     for pc in prefetch_to_device(phi_chunks, enabled=prefetch,
-                                 stats=h2d_stats):
+                                 measure=h2d_stats):
         deg_c = np.asarray(pc @ colsum)
         deg_chunks.append(deg_c)
         if laplacian:

@@ -165,7 +165,7 @@ def _as_chunk_list(chunks: Chunks) -> list[np.ndarray]:
 
 
 def row_normalize_chunks(chunks: Chunks, *, prefetch: bool = True,
-                         stats: Optional[dict] = None):
+                         measure: Optional[dict] = None):
     """Chunked Alg. 2 step 4: unit-ℓ₂ rows, one chunk on device at a time.
 
     Row normalization is row-local, so this is bit-identical to
@@ -176,7 +176,7 @@ def row_normalize_chunks(chunks: Chunks, *, prefetch: bool = True,
     out = [
         np.asarray(row_normalize(c))
         for c in prefetch_to_device(_as_chunk_list(chunks), enabled=prefetch,
-                                    stats=stats)
+                                    measure=measure)
     ]
     return ChunkedDense(tuple(out))
 
@@ -226,7 +226,7 @@ def streaming_kmeans(
     n_replicates: int = 4,
     impl: str = "auto",
     prefetch: bool = True,
-    stats: Optional[dict] = None,
+    measure: Optional[dict] = None,
 ) -> KMeansResult:
     """k-means over host-resident row chunks — no O(N) device allocation.
 
@@ -262,7 +262,7 @@ def streaming_kmeans(
     step = 0
     while step < n_steps:
         for xb in prefetch_to_device(chunk_list, enabled=prefetch,
-                                     stats=stats):
+                                     measure=measure):
             if step >= n_steps:
                 break
             for rep in range(n_replicates):
@@ -272,7 +272,7 @@ def streaming_kmeans(
 
     inertia = np.zeros((n_replicates,))
     label_chunks = [[] for _ in range(n_replicates)]
-    for xb in prefetch_to_device(chunk_list, enabled=prefetch, stats=stats):
+    for xb in prefetch_to_device(chunk_list, enabled=prefetch, measure=measure):
         for rep in range(n_replicates):
             labels_c, dists = ops.kmeans_assign(xb, cents[rep], impl=impl)
             inertia[rep] += float(jnp.sum(dists))

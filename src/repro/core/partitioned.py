@@ -47,6 +47,7 @@ from repro.core import featuremap, rowmatrix, streaming
 from repro.core.kmeans import KMeansResult
 from repro.core.options import PartitionOptions
 from repro.kernels import ops
+from repro.obs import trace as obs_trace
 from repro.utils import StageTimer
 
 
@@ -254,18 +255,26 @@ def execute_partitioned(x, cfg, plan, *, final_stage: str = "kmeans",
     workers = popts.workers or max(1, min(n_parts, len(devices)))
 
     def fit_one(i: int, xp):
-        ctx = (jax.default_device(devices[i % len(devices)])
+        dev = devices[i % len(devices)]
+        ctx = (jax.default_device(dev)
                if len(devices) > 1 else contextlib.nullcontext())
-        with ctx:
-            # recursive executor reuse: each partition is a complete
-            # single-placement SC_RB fit ending in its local k-means
-            return _executor.execute(xp, sub_cfg, sub_plan,
-                                     final_stage="kmeans",
-                                     keep_embedding=False, keep_state=True)
+        # this span closes on the worker thread, so each partition lands on
+        # its own Perfetto track (workers > 1 ⇒ parallel lanes), temporally
+        # nested under the root "fit" span on the main track
+        with obs_trace.span("partition_fit", partition=i, device=str(dev),
+                            rows=_part_rows(xp)):
+            with ctx:
+                # recursive executor reuse: each partition is a complete
+                # single-placement SC_RB fit ending in its local k-means
+                return _executor.execute(xp, sub_cfg, sub_plan,
+                                         final_stage="kmeans",
+                                         keep_embedding=False,
+                                         keep_state=True)
 
     with timer.stage("partition_fits"):
         if workers > 1:
-            with ThreadPoolExecutor(max_workers=workers) as pool:
+            with ThreadPoolExecutor(max_workers=workers,
+                                    thread_name_prefix="partfit") as pool:
                 results = list(pool.map(fit_one, range(n_parts), parts))
         else:
             results = [fit_one(i, xp) for i, xp in enumerate(parts)]

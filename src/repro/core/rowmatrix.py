@@ -314,7 +314,7 @@ class HostChunkedRows:
         out = [
             np.asarray(fn(*cs))
             for cs in prefetch_to_device(zip(*seqs), enabled=self.ell.prefetch,
-                                         stats=self.ell.h2d_stats)
+                                         measure=self.ell.h2d_stats)
         ]
         return streaming.ChunkedDense(tuple(out))
 
@@ -322,7 +322,7 @@ class HostChunkedRows:
         seqs = [self._tall_chunks(t) for t in tall]
         acc = init
         for cs in prefetch_to_device(zip(*seqs), enabled=self.ell.prefetch,
-                                     stats=self.ell.h2d_stats):
+                                     measure=self.ell.h2d_stats):
             acc = fn(acc, *cs)
         return acc
 
@@ -341,7 +341,7 @@ class HostChunkedRows:
         res = streaming_kmeans(
             key, u_hat, cfg.n_clusters, n_steps=kmeans_steps,
             n_replicates=cfg.kmeans_replicates, impl=cfg.impl,
-            prefetch=self.ell.prefetch, stats=self.ell.h2d_stats)
+            prefetch=self.ell.prefetch, measure=self.ell.h2d_stats)
         return res, {"kmeans_steps": kmeans_steps}
 
     def residency_diagnostics(self, cfg) -> dict:

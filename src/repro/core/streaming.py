@@ -209,7 +209,7 @@ class ChunkedELL:
         of (idx, rowscale, *extras); upload sizes land in ``h2d_stats``."""
         return prefetch_to_device(
             zip(self.idx_chunks, self.rowscale_chunks, *extra_chunk_seqs),
-            enabled=self.prefetch, stats=self.h2d_stats)
+            enabled=self.prefetch, measure=self.h2d_stats)
 
     def rmatmat(self, u: jax.Array) -> jax.Array:
         """Ẑᵀ u : (N, K) → (D, K), one (D, K) accumulator over row chunks."""
@@ -321,11 +321,11 @@ def chunked_rb_transform(
 
 def chunked_bin_counts(
     idx_chunks: Sequence[np.ndarray], *, d: int, d_g: int, impl: str = "auto",
-    prefetch: bool = True, stats: Optional[dict] = None,
+    prefetch: bool = True, measure: Optional[dict] = None,
 ) -> jax.Array:
     """Global int32 bin occupancies Σ_c Z_cᵀ1 — exact for any chunking."""
     counts = jnp.zeros((d,), jnp.int32)
-    for ic in prefetch_to_device(idx_chunks, enabled=prefetch, stats=stats):
+    for ic in prefetch_to_device(idx_chunks, enabled=prefetch, measure=measure):
         counts = counts + ops.bin_counts(ic, d=d, d_g=d_g, impl=impl)
     return counts
 
@@ -362,11 +362,11 @@ def build_chunked_adjacency(
     idx_chunks = tuple(np.asarray(ic) for ic in idx_chunks)
     h2d_stats: dict = {}
     counts = chunked_bin_counts(idx_chunks, d=d, d_g=d_g, impl=impl,
-                                prefetch=prefetch, stats=h2d_stats)
+                                prefetch=prefetch, measure=h2d_stats)
     r = np.float32(idx_chunks[0].shape[1])
     deg_chunks, scale_chunks = [], []
     for ic in prefetch_to_device(idx_chunks, enabled=prefetch,
-                                 stats=h2d_stats):
+                                 measure=h2d_stats):
         deg_c = np.asarray(graph.degrees_from_counts(ic, counts))
         deg_chunks.append(deg_c)
         if normalize:

@@ -1,0 +1,32 @@
+"""Observability subsystem: structured tracing, metrics, memory watermarks.
+
+Three pillars, wired through every layer of the SC_RB stack:
+
+``repro.obs.trace``
+    Thread-safe hierarchical span tracer with JAX-aware closing (optional
+    device sync on span exit so spans measure device work, not dispatch),
+    span attributes, per-thread tracks, and Chrome-trace-event JSON export
+    viewable in Perfetto / ``chrome://tracing``. Off by default; enabled via
+    ``SCRBConfig(trace=...)``, ``EngineConfig(trace=...)``, or the
+    ``REPRO_TRACE=<path>`` environment variable.
+
+``repro.obs.metrics``
+    Process-wide registry (``repro.obs.metrics.REGISTRY``) of labeled
+    counters, gauges, and log-bucketed histograms (p50/p90/p99 estimated
+    from buckets — no sample storage), with ``snapshot``/``reset`` for
+    tests and a Prometheus text-exposition encoder (served by
+    ``serve.server`` at ``GET /metrics``). Always on: recording a metric is
+    a dict update under a lock, nanoseconds next to any device work.
+
+``repro.obs.memory``
+    Device-memory and host-RSS watermark sampling with per-span peak
+    deltas; the tracer samples it on span enter/exit when configured.
+
+Kill switch: ``REPRO_OBS_DISABLED=1`` disables both pillars at import time
+(spans become no-ops, instruments stop recording) — the honest "no
+observability" baseline the CI overhead gate (``benchmarks/obs_bench.py``)
+compares against.
+"""
+from repro.obs import memory, metrics, trace
+
+__all__ = ["memory", "metrics", "trace"]

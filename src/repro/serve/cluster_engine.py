@@ -44,8 +44,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import model as _model
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 
 MODES = ("predict", "transform")
+
+#: The per-model counters behind ``stats()`` — one ``engine_<key>_total``
+#: counter per key on the engine's private registry.
+STAT_KEYS = ("compiles", "cache_hits", "resident_hits", "resident_misses",
+             "evictions", "rows_served", "batches", "padded_rows")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +69,10 @@ class EngineConfig:
     max_batch_rows: Optional[int] = None  # coalescing cap per device launch;
     # None → top bucket
     impl: Optional[str] = None            # kmeans_assign impl override
+    trace: Optional[str] = None           # Chrome-trace output path: enables
+    # process-wide repro.obs tracing at engine construction (engine.step
+    # batches emit spans) and exports the trace at process exit. None keeps
+    # tracing off; REPRO_TRACE=<path> is the env equivalent.
 
     def __post_init__(self):
         if self.donate not in ("auto", "on", "off"):
@@ -136,14 +147,19 @@ class Result:
         return self.completed_at - self.submitted_at
 
 
-def _new_stats() -> Dict[str, int]:
-    return {"compiles": 0, "cache_hits": 0, "resident_hits": 0,
-            "resident_misses": 0, "evictions": 0, "rows_served": 0,
-            "batches": 0, "padded_rows": 0}
-
-
 class ClusterEngine:
-    """Long-lived multi-model serving loop; see module docstring."""
+    """Long-lived multi-model serving loop; see module docstring.
+
+    Observability: every counter that used to live in a hand-rolled
+    ``_model_stats`` dict now lives on a *per-engine*
+    ``repro.obs.metrics.MetricsRegistry`` (``self.registry`` — private so
+    concurrent engines, e.g. a test suite's, never cross-talk), alongside a
+    per-(model, mode) request-latency histogram. ``stats()`` reconstructs
+    the historical dict shape from the registry — same keys, same ints —
+    plus ``latency_p50_ms``/``latency_p99_ms``; ``metrics_text()`` renders
+    the registry (plus the process-global one) in Prometheus format for
+    ``GET /metrics``.
+    """
 
     def __init__(self, config: Optional[EngineConfig] = None):
         self.config = config or EngineConfig()
@@ -156,12 +172,31 @@ class ClusterEngine:
         self._pending: "collections.deque[_Request]" = collections.deque()
         self._results: Dict[int, _Request] = {}
         self._tickets = itertools.count()
-        self._model_stats: Dict[str, Dict[str, int]] = {}
+        self.registry = obs_metrics.MetricsRegistry()
+        self._counters: Dict[str, obs_metrics.Counter] = {
+            key: self.registry.counter(
+                f"engine_{key}_total", f"Engine per-model {key} events.",
+                ("model",))
+            for key in STAT_KEYS}
+        self._requests_total = self.registry.counter(
+            "engine_requests_total", "Requests completed by the engine.",
+            ("model", "mode"))
+        self._latency_hist = self.registry.histogram(
+            "engine_request_latency_seconds",
+            "Per-request submit→complete latency.", ("model", "mode"))
+        self._batch_rows_hist = self.registry.histogram(
+            "engine_batch_rows", "Real rows per coalesced device batch.",
+            ("model",), buckets=obs_metrics.log_buckets(1.0, 2 ** 20, 2))
         self.total_compiles = 0
         if self.config.donate == "auto":
             self._donate = jax.default_backend() != "cpu"
         else:
             self._donate = self.config.donate == "on"
+        if self.config.trace:
+            obs_trace.enable(self.config.trace)
+
+    def _bump(self, name: str, key: str, amount: int = 1) -> None:
+        self._counters[key].inc(amount, model=name)
 
     # -- model registry / LRU ---------------------------------------------
     def load_model(self, name: str, source) -> _model.SCRBModel:
@@ -180,17 +215,17 @@ class ClusterEngine:
             for key in [k for k in self._cells if k[0] == name]:
                 del self._cells[key]
         self._models[name] = mdl
-        self._model_stats.setdefault(name, _new_stats())
+        for key in STAT_KEYS:       # materialize zeroed series so the model
+            self._counters[key].inc(0, model=name)   # shows in /metrics now
         return mdl
 
     def _ensure_resident(self, name: str) -> _Resident:
-        st = self._model_stats[name]
         res = self._resident.get(name)
         if res is not None:
-            st["resident_hits"] += 1
+            self._bump(name, "resident_hits")
             self._resident.move_to_end(name)
             return res
-        st["resident_misses"] += 1
+        self._bump(name, "resident_misses")
         mdl = self._models[name]
         fm = jax.tree_util.tree_map(jnp.asarray, mdl.feature_map)
         dual = jnp.asarray(mdl.degree_dual)
@@ -218,16 +253,15 @@ class ClusterEngine:
 
         while len(self._resident) > 1 and over():
             victim, _ = self._resident.popitem(last=False)
-            self._model_stats[victim]["evictions"] += 1
+            self._bump(victim, "evictions")
 
     # -- bucketed AOT jit cache -------------------------------------------
     def _cell(self, name: str, bucket: int, mode: str, res: _Resident,
               dim: int):
         key = (name, bucket, mode)
         cell = self._cells.get(key)
-        st = self._model_stats[name]
         if cell is not None:
-            st["cache_hits"] += 1
+            self._bump(name, "cache_hits")
             return cell
         mdl = self._models[name]
         xs = jax.ShapeDtypeStruct((bucket, dim), jnp.float32)
@@ -245,7 +279,7 @@ class ClusterEngine:
             cell = fn.lower(res.fm, res.dual, res.proj, xs,
                             laplacian=mdl.laplacian_normalize).compile()
         self._cells[key] = cell
-        st["compiles"] += 1
+        self._bump(name, "compiles")
         self.total_compiles += 1
         return cell
 
@@ -295,6 +329,7 @@ class ClusterEngine:
         if x.shape[0] == 0:                 # nothing to do on device
             req.completed_at = req.submitted_at
             self._results[req.ticket] = req
+            self._requests_total.inc(model=name, mode=mode)
         else:
             self._pending.append(req)
         return req.ticket
@@ -319,21 +354,23 @@ class ClusterEngine:
             total += n
         bucket = _model.round_to_bucket(total, self.config.buckets)
         dim = take[0][0].x.shape[1]
-        res = self._ensure_resident(name)
-        cell = self._cell(name, bucket, mode, res, dim)
-        buf = self._ring.get(bucket, dim)
-        off = 0
-        for req, n in take:
-            buf[off:off + n] = req.x[req.cursor:req.cursor + n]
-            off += n
-        buf[off:] = 0.0                     # mask: pad rows are zeros and
-        xdev = jax.device_put(buf)          # get sliced off below
-        if mode == "predict":
-            out = cell(res.fm, res.dual, res.proj, res.cents, xdev)
-        else:
-            out = cell(res.fm, res.dual, res.proj, xdev)
-        out = np.asarray(out)
-        done_at = time.perf_counter()
+        with obs_trace.span("engine.step", sync=False, model=name,
+                            mode=mode, bucket=bucket, rows=total):
+            res = self._ensure_resident(name)
+            cell = self._cell(name, bucket, mode, res, dim)
+            buf = self._ring.get(bucket, dim)
+            off = 0
+            for req, n in take:
+                buf[off:off + n] = req.x[req.cursor:req.cursor + n]
+                off += n
+            buf[off:] = 0.0                 # mask: pad rows are zeros and
+            xdev = jax.device_put(buf)      # get sliced off below
+            if mode == "predict":
+                out = cell(res.fm, res.dual, res.proj, res.cents, xdev)
+            else:
+                out = cell(res.fm, res.dual, res.proj, xdev)
+            out = np.asarray(out)           # blocks on the device result, so
+            done_at = time.perf_counter()   # the span needs no extra sync
         off = 0
         for req, n in take:
             req.out[req.cursor:req.cursor + n] = out[off:off + n]
@@ -343,10 +380,13 @@ class ClusterEngine:
                 req.completed_at = done_at
                 self._results[req.ticket] = req
                 self._pending.remove(req)
-        st = self._model_stats[name]
-        st["rows_served"] += total
-        st["batches"] += 1
-        st["padded_rows"] += bucket - total
+                self._requests_total.inc(model=name, mode=mode)
+                self._latency_hist.observe(done_at - req.submitted_at,
+                                           model=name, mode=mode)
+        self._bump(name, "rows_served", total)
+        self._bump(name, "batches")
+        self._bump(name, "padded_rows", bucket - total)
+        self._batch_rows_hist.observe(total, model=name)
         return total
 
     def drain(self) -> int:
@@ -386,10 +426,36 @@ class ClusterEngine:
     def resident_models(self) -> Tuple[str, ...]:
         return tuple(self._resident)
 
+    def _model_stat_dict(self, name: str) -> Dict[str, int]:
+        """One model's historical 8-key stats dict, reconstructed from the
+        registry counters (same keys, same ints as the pre-registry dicts)."""
+        if name not in self._models:
+            raise KeyError(name)
+        return {key: int(self._counters[key].get(model=name))
+                for key in STAT_KEYS}
+
+    def latency_quantiles(self, name: str, mode: str = "predict",
+                          *, qs: Tuple[float, ...] = (0.5, 0.99)
+                          ) -> Dict[float, Optional[float]]:
+        """Per-request latency quantiles (seconds) for one (model, mode)
+        from the engine's own log-bucketed histogram; values are ``None``
+        until that series has traffic."""
+        return {q: self._latency_hist.quantile(q, model=name, mode=mode)
+                for q in qs}
+
     def stats(self, name: Optional[str] = None) -> Dict[str, Any]:
         if name is not None:
-            return dict(self._model_stats[name])
-        per = {k: dict(v) for k, v in self._model_stats.items()}
+            return self._model_stat_dict(name)
+        per = {}
+        for m in self._models:
+            d = self._model_stat_dict(m)
+            for mode in MODES:
+                p50 = self._latency_hist.quantile(0.5, model=m, mode=mode)
+                p99 = self._latency_hist.quantile(0.99, model=m, mode=mode)
+                if p50 is not None:
+                    d[f"latency_{mode}_p50_ms"] = p50 * 1e3
+                    d[f"latency_{mode}_p99_ms"] = p99 * 1e3
+            per[m] = d
         return {
             "models": per,
             "total_compiles": self.total_compiles,
@@ -403,3 +469,20 @@ class ClusterEngine:
             "padded_rows": sum(s["padded_rows"] for s in per.values()),
             "evictions": sum(s["evictions"] for s in per.values()),
         }
+
+    def metrics_text(self) -> str:
+        """Prometheus text exposition: this engine's registry plus the
+        process-global one (fit/prefetch/solver series) — the body served
+        by ``GET /metrics``."""
+        self.registry.gauge(
+            "engine_resident_models",
+            "Models with device-resident state.").set(len(self._resident))
+        self.registry.gauge(
+            "engine_resident_bytes",
+            "Bytes of device-resident model state.").set(
+            sum(r.nbytes for r in self._resident.values()))
+        self.registry.gauge(
+            "engine_pending_requests", "Queued unfinished requests.").set(
+            len(self._pending))
+        return obs_metrics.render_prometheus(
+            [self.registry, obs_metrics.REGISTRY])

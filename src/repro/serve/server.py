@@ -12,6 +12,11 @@ Routes:
   POST /v1/transform  {"model": name, "rows": [[...], ...]} → {"embedding": ...}
   POST /v1/models     {"name": name, "path": npz}           → load / hot-swap
   GET  /v1/stats                                            → engine stats
+                        (incl. latency_*_p50_ms/p99_ms from the engine's
+                        request-latency histograms)
+  GET  /metrics       Prometheus text exposition (engine registry + the
+                        process-global repro.obs registry) — point a
+                        Prometheus scrape job at this
 
 Usage::
 
@@ -46,6 +51,16 @@ def _make_handler(engine: ClusterEngine, lock: threading.Lock):
             self.wfile.write(body)
 
         def do_GET(self):
+            if self.path == "/metrics":
+                with lock:
+                    body = engine.metrics_text().encode("utf-8")
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                return
             if self.path != "/v1/stats":
                 return self._reply(404, {"error": f"no route {self.path}"})
             with lock:

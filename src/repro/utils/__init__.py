@@ -5,11 +5,15 @@ import contextlib
 import dataclasses
 import logging
 import time
+import warnings
 from typing import Any, Callable, Dict, Iterator
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import metrics as _metrics
+from repro.obs import trace as _trace
 
 logger = logging.getLogger("repro")
 if not logger.handlers:
@@ -19,11 +23,22 @@ if not logger.handlers:
     logger.setLevel(logging.INFO)
 
 
+_STAGE_SECONDS = _metrics.REGISTRY.histogram(
+    "repro_stage_seconds", "Pipeline stage wall-clock seconds.", ("stage",))
+
+
 class StageTimer:
     """Wall-clock per-stage timer used by the SC_RB pipeline and benchmarks.
 
     Records {stage: seconds}; ``block_until_ready`` is applied to jax outputs
     so timings are honest under async dispatch.
+
+    Since the observability subsystem landed this is a compatibility shim:
+    each ``stage`` additionally opens a ``repro.obs.trace`` span (``sync``
+    left to the tracer default) and feeds the ``repro_stage_seconds``
+    histogram, but ``self.times`` is still populated from the timer's own
+    ``perf_counter`` pair so the `{stage: seconds}` contract — and
+    ``FitResult.timings`` built on it — is preserved bit-for-bit.
     """
 
     def __init__(self) -> None:
@@ -31,9 +46,12 @@ class StageTimer:
 
     @contextlib.contextmanager
     def stage(self, name: str) -> Iterator[None]:
-        t0 = time.perf_counter()
-        yield
-        self.times[name] = self.times.get(name, 0.0) + time.perf_counter() - t0
+        with _trace.span(name):
+            t0 = time.perf_counter()
+            yield
+            dt = time.perf_counter() - t0
+        self.times[name] = self.times.get(name, 0.0) + dt
+        _STAGE_SECONDS.observe(dt, stage=name)
 
     def timed(self, name: str, fn: Callable, *args, **kwargs):
         with self.stage(name):
@@ -78,8 +96,16 @@ def asdict_shallow(obj: Any) -> Dict[str, Any]:
     raise TypeError(f"not a dataclass: {obj!r}")
 
 
+_PREFETCH_ITEMS = _metrics.REGISTRY.counter(
+    "repro_prefetch_items_total", "Host pytrees uploaded by prefetch_to_device.")
+_PREFETCH_BYTES = _metrics.REGISTRY.counter(
+    "repro_prefetch_bytes_total", "Bytes uploaded by prefetch_to_device.")
+
+
 def prefetch_to_device(
-    items: Any, *, enabled: bool = True, stats: "Dict[str, int] | None" = None
+    items: Any, *, enabled: bool = True,
+    stats: "Dict[str, int] | None" = None,
+    measure: "Dict[str, int] | None" = None,
 ) -> Iterator[Any]:
     """Double-buffered H2D upload of an iterable of host pytrees.
 
@@ -93,21 +119,46 @@ def prefetch_to_device(
     so results are bitwise identical either way; only the transfer/compute
     overlap changes.
 
-    ``stats`` (optional dict) is updated in place with the *measured* upload
-    sizes — ``max_item_bytes`` (largest single pytree uploaded) and
+    ``measure`` (optional dict) is updated in place with the *measured*
+    upload sizes — ``max_item_bytes`` (largest single pytree uploaded) and
     ``items`` — so residency diagnostics can report what was actually
-    streamed rather than a closed-form estimate.
+    streamed rather than a closed-form estimate. Every upload also feeds
+    the process metrics registry (``repro_prefetch_items_total`` /
+    ``repro_prefetch_bytes_total``, scrapable at ``GET /metrics``) and,
+    when tracing is on, an ``h2d`` span per item (``sync=False`` — the span
+    times the *issue*, on purpose: syncing here would serialize the double
+    buffering this generator exists to provide).
+
+    .. deprecated:: the ``stats=`` keyword is the pre-observability name of
+       ``measure=`` and now emits a ``DeprecationWarning``; it behaves
+       identically.
 
     Shared by every chunk sweep in the streaming pipeline: the degree pass,
     the blocked Gram mat-vecs inside the LOBPCG loop, and the streaming
     k-means sweeps.
     """
+    if stats is not None:
+        warnings.warn(
+            "prefetch_to_device(stats=...) is deprecated; use measure=... "
+            "(same dict contract). Totals are also on the metrics registry "
+            "as repro_prefetch_{items,bytes}_total.",
+            DeprecationWarning, stacklevel=2)
+        if measure is None:
+            measure = stats
+
     def put(t):
-        if stats is not None:
-            stats["max_item_bytes"] = max(stats.get("max_item_bytes", 0),
-                                          tree_bytes(t))
-            stats["items"] = stats.get("items", 0) + 1
-        return jax.tree_util.tree_map(jax.device_put, t)
+        # not tree_bytes(): prefetched items may carry scalar leaves
+        # (chunk indices) alongside the arrays
+        nbytes = sum(int(getattr(leaf, "nbytes", 0))
+                     for leaf in jax.tree_util.tree_leaves(t))
+        if measure is not None:
+            measure["max_item_bytes"] = max(measure.get("max_item_bytes", 0),
+                                            nbytes)
+            measure["items"] = measure.get("items", 0) + 1
+        _PREFETCH_ITEMS.inc()
+        _PREFETCH_BYTES.inc(nbytes)
+        with _trace.span("h2d", sync=False, bytes=nbytes):
+            return jax.tree_util.tree_map(jax.device_put, t)
 
     it = iter(items)
     if not enabled:
